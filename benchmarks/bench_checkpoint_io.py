@@ -1,0 +1,34 @@
+"""Paper Fig. 9 (Sec. 5.6): SSD throughput -> checkpoint I/O.
+
+Sequential write/read of a sharded checkpoint (the cluster's real SSD
+workload) + many-small-leaves variant (random-access pattern).
+"""
+import shutil
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.checkpoint import ckpt
+
+
+def run():
+    big = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(64, 1024, 256)), jnp.float32)}            # 64 MB
+    small = {f"l{i}": jnp.zeros((1024,), jnp.float32) for i in range(256)}
+    nbytes = 64 * 1024 * 256 * 4
+    for name, tree, size in (("seq", big, nbytes),
+                             ("small_leaves", small, 256 * 4096)):
+        d = tempfile.mkdtemp()
+        try:
+            t_w = time_fn(lambda: ckpt.save(tree, d, 1), warmup=1, iters=3)
+            t_r = time_fn(lambda: ckpt.restore(tree, d), warmup=1, iters=3)
+            emit(f"ckpt/{name}/write", t_w, f"{size / t_w / 1e6:.0f}MB/s")
+            emit(f"ckpt/{name}/read", t_r, f"{size / t_r / 1e6:.0f}MB/s")
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

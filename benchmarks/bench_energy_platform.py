@@ -1,0 +1,36 @@
+"""Paper Sec. 4: energy measurement platform throughput + resolution.
+
+Derived columns assert the platform's headline numbers: 1000 SPS per probe,
+milliwatt resolution, 12-probe aggregation, tag attribution overhead — and
+the comparison against GRID'5000 (~50 SPS @ 0.1 W).
+"""
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.mainboard import MainBoard
+from repro.core.probe import MILLIWATT, REPORT_SPS, Probe, ProbeConfig, read_vectorized
+
+
+def run():
+    mb = MainBoard()
+    for i in range(12):
+        mb.attach(Probe(lambda t: 80.0 + 10 * np.sin(t),
+                        ProbeConfig(probe_id=i)))
+    t = time_fn(lambda: mb.read_samples(0.05), warmup=1, iters=3)
+    n_samples = 12 * int(0.05 * REPORT_SPS)
+    emit("energy/mainboard_12probe", t,
+         f"{n_samples / t:.0f}samples/s_processed;hw_rate={REPORT_SPS}SPS")
+
+    t = time_fn(lambda: read_vectorized(lambda x: 95.0, 0.0, 10.0),
+                warmup=1, iters=3)
+    emit("energy/probe_vectorized_10s", t,
+         f"{10 * REPORT_SPS / t:.0f}samples/s;res={MILLIWATT * 1e3:.0f}mW")
+
+    with mb.tags.tag("fwd"):
+        samples = mb.read_samples(0.02)[0]
+    t = time_fn(lambda: MainBoard.energy_by_tag(samples), warmup=1, iters=5)
+    emit("energy/tag_attribution", t, f"grid5000_ratio={REPORT_SPS / 50:.0f}x")
+
+
+if __name__ == "__main__":
+    run()

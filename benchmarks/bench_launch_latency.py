@@ -1,0 +1,43 @@
+"""Paper Fig. 8 (Sec. 5.5): kernel launch latency.
+
+On DALEK this is the OpenCL enqueue-to-start latency (5-90 us across GPUs).
+The JAX/TPU analogues measured here: jitted-callable dispatch overhead
+(cached executable), pallas_call dispatch, and trace+compile cost (the
+"first-launch" latency users actually hit).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+
+def run():
+    x = jnp.zeros((8, 8), jnp.float32)
+
+    @jax.jit
+    def tiny(v):
+        return v + 1.0
+
+    t = time_fn(tiny, x, warmup=3, iters=20)
+    emit("launch/jit_dispatch", t, "cached-executable")
+
+    from repro.kernels.stream import stream as sk
+    t = time_fn(lambda: sk.stream_copy(x, block_rows=8, interpret=True),
+                warmup=2, iters=5)
+    emit("launch/pallas_interpret", t, "interpret-mode")
+
+    def fresh():
+        @jax.jit
+        def f(v):
+            return v * 2.0
+        return f(x)
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(fresh())
+    emit("launch/trace_compile", time.perf_counter() - t0, "first-launch")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 5 / Fig. 7 (Sec. 5.2/5.4): peak compute across DPA variants.
+
+FMA f32, DPA2 (bf16->f32) and DPA4 (i8->i32) matmuls — measured wall-clock
+Gop/s on this host via XLA, plus the TPU v5e model peaks the kernels target
+(the paper's observed 2x ladder FMA->DPA2->DPA4 maps to the MXU's
+f32:bf16:int8 throughput ladder).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.dpa_matmul import ref as dpa_ref
+
+M = K = N = 512
+V5E_PEAKS = {"fma_f32": 49e12, "dpa2": 197e12, "dpa4": 394e12}
+
+
+def run():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    flops = 2 * M * K * N
+    for variant in ("fma_f32", "dpa2", "dpa4"):
+        fn = jax.jit(lambda x, y, v=variant: dpa_ref.matmul(x, y, v))
+        t = time_fn(fn, a, b)
+        gops = flops / t / 1e9
+        emit(f"peak/{variant}/{M}x{K}x{N}", t,
+             f"{gops:.1f}Gop/s;v5e_target={V5E_PEAKS[variant]/1e12:.0f}Top/s")
+
+
+if __name__ == "__main__":
+    run()

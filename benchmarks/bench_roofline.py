@@ -1,0 +1,48 @@
+"""§Roofline report: reads the dry-run records (results/dryrun/*) and prints
+the three-term roofline per (arch x shape x mesh) + J/token from the energy
+model. This is the table EXPERIMENTS.md §Roofline embeds.
+"""
+import json
+import pathlib
+
+from benchmarks.common import emit
+from repro.core import energy
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh="single"):
+    out = []
+    d = RESULTS / mesh
+    if not d.exists():
+        return out
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if "roofline" in rec:
+            out.append(rec)
+    return out
+
+
+def run():
+    for mesh in ("single", "multi"):
+        for rec in load(mesh):
+            rl = rec["roofline"]
+            terms = {"compute": rl["compute_s"], "memory": rl["memory_s"],
+                     "collective": rl["collective_s"]}
+            t_step = energy.step_time_s(terms)
+            e_step = energy.step_energy_j(terms) * rec["n_chips"]
+            shape_tokens = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+                            "decode_32k": 128, "long_500k": 1}
+            tokens = shape_tokens.get(rec["shape"], 1)
+            jpt = e_step / tokens
+            frac = rl["compute_s"] / max(t_step, 1e-12)
+            emit(f"roofline/{mesh}/{rec['arch']}/{rec['shape']}",
+                 t_step,
+                 f"dom={rl['dominant']};roofline_frac={frac:.3f};"
+                 f"useful={rl['useful_ratio']:.2f};"
+                 f"hbm={rec.get('hbm_per_device_gb', 0):.1f}GiB;"
+                 f"J/tok={jpt:.4g}")
+
+
+if __name__ == "__main__":
+    run()

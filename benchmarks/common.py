@@ -1,0 +1,23 @@
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup=2, iters=5, **kw):
+    """Median wall time per call in seconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name, seconds, derived=""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("bandwidth (Fig. 4/6)", "benchmarks.bench_bandwidth"),
+    ("peak compute (Fig. 5/7)", "benchmarks.bench_peak"),
+    ("launch latency (Fig. 8)", "benchmarks.bench_launch_latency"),
+    ("checkpoint/SSD IO (Fig. 9)", "benchmarks.bench_checkpoint_io"),
+    ("energy platform (Sec. 4)", "benchmarks.bench_energy_platform"),
+    ("elastic power (Sec. 3.4)", "benchmarks.bench_elastic"),
+    ("hetero scheduling (Sec. 6.1)", "benchmarks.bench_scheduler"),
+    ("roofline (dry-run)", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        print(f"# {label}", file=sys.stderr)
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception:  # noqa
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

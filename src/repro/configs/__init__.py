@@ -1,0 +1,4 @@
+from repro.configs.base import (
+    ARCH_NAMES, SHAPES, ModelConfig, ShapeConfig, all_cells, get, get_smoke,
+    shape_cells,
+)

@@ -1,0 +1,125 @@
+"""Energy model: J/step and J/token from the compiled dry-run + DVFS.
+
+The paper measures socket power at 1000 SPS; on the TPU target we *derive*
+power from the compiled artifact instead: the roofline terms give per-chip
+busy time and utilization, the DVFS model gives power at a frequency, and
+the probe/mainboard pipeline replays the resulting trace so every
+paper experiment (tagging, averaging, capping) runs identically.
+
+DVFS model (standard cubic): P(f, u) = P_idle + (P_tdp - P_idle) * u * (f/f_max)^3
+with throughput proportional to f for compute-bound work and ~flat for
+memory-bound work (memory clock is not scaled).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.core.hw import DeviceSpec, TPU_V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class DvfsState:
+    f_ghz: float
+
+    def rel(self, dev: DeviceSpec) -> float:
+        return self.f_ghz / dev.f_max_ghz
+
+
+def power_w(dev: DeviceSpec, util: float, dvfs: Optional[DvfsState] = None) -> float:
+    """Instantaneous device power at utilization ``util`` in [0,1]."""
+    rel = 1.0 if dvfs is None else dvfs.rel(dev)
+    return dev.idle_w + (dev.tdp_w - dev.idle_w) * util * rel ** 3
+
+
+def step_time_s(roofline_terms: Dict[str, float],
+                dvfs: Optional[DvfsState] = None,
+                dev: DeviceSpec = TPU_V5E,
+                overlap: float = 1.0) -> float:
+    """Predicted step time from the three roofline terms.
+
+    overlap=1.0: perfect compute/comm overlap (max of terms);
+    overlap=0.0: fully serialized (sum of terms).
+    Compute scales 1/f; memory and collective terms do not.
+    """
+    rel = 1.0 if dvfs is None else dvfs.rel(dev)
+    c = roofline_terms["compute"] / max(rel, 1e-6)
+    m = roofline_terms["memory"]
+    x = roofline_terms["collective"]
+    t_overlap = max(c, m, x)
+    t_serial = c + m + x
+    return overlap * t_overlap + (1.0 - overlap) * t_serial
+
+
+def step_energy_j(roofline_terms: Dict[str, float],
+                  dvfs: Optional[DvfsState] = None,
+                  dev: DeviceSpec = TPU_V5E,
+                  overlap: float = 1.0) -> float:
+    """Per-chip energy of one step: P(util, f) * t_step."""
+    t = step_time_s(roofline_terms, dvfs, dev, overlap)
+    rel = 1.0 if dvfs is None else dvfs.rel(dev)
+    busy = roofline_terms["compute"] / max(rel, 1e-6)
+    util = min(busy / t, 1.0) if t > 0 else 0.0
+    return power_w(dev, util, dvfs) * t
+
+
+def tokens_per_joule(roofline_terms, tokens_per_step, n_chips,
+                     dvfs=None, dev=TPU_V5E) -> float:
+    e = step_energy_j(roofline_terms, dvfs, dev) * n_chips
+    return tokens_per_step / e if e else 0.0
+
+
+def power_trace_fn(roofline_terms, dvfs=None, dev: DeviceSpec = TPU_V5E,
+                   period_s: Optional[float] = None) -> Callable[[float], float]:
+    """power(t) for one chip running repeated steps — drives the probes.
+
+    Within each step the trace is piecewise: compute-bound phase at high
+    power, then memory/collective-bound phase at lower power (utilization
+    drops while waiting on HBM/ICI).
+    """
+    t_step = period_s or step_time_s(roofline_terms, dvfs, dev)
+    rel = 1.0 if dvfs is None else dvfs.rel(dev)
+    t_busy = min(roofline_terms["compute"] / max(rel, 1e-6), t_step)
+
+    def fn(t: float) -> float:
+        phase = t % t_step
+        util = 1.0 if phase < t_busy else 0.35  # stall power fraction
+        return power_w(dev, util, dvfs)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# power capping (paper Sec. 3.6: RAPL / nvidia-smi power caps)
+
+
+def cap_frequency(cap_w: float, roofline_terms, dev: DeviceSpec = TPU_V5E,
+                  n_steps: int = 32) -> DvfsState:
+    """Highest frequency whose average step power is within the cap.
+
+    Discrete frequency ladder (like cpufreq governors); returns f_min even
+    if the cap is unreachable (can't go below idle).
+    """
+    for i in range(n_steps, -1, -1):
+        f = dev.f_min_ghz + (dev.f_max_ghz - dev.f_min_ghz) * i / n_steps
+        st = DvfsState(f)
+        t = step_time_s(roofline_terms, st, dev)
+        e = step_energy_j(roofline_terms, st, dev)
+        if t > 0 and e / t <= cap_w:
+            return st
+    return DvfsState(dev.f_min_ghz)
+
+
+def pareto_frontier(roofline_terms, dev: DeviceSpec = TPU_V5E, n: int = 16):
+    """(f, time, energy) sweep — the energy/performance trade-off the paper's
+    DVFS + measurement platform is built to explore."""
+    out = []
+    for i in range(n + 1):
+        f = dev.f_min_ghz + (dev.f_max_ghz - dev.f_min_ghz) * i / n
+        st = DvfsState(f)
+        out.append({
+            "f_ghz": f,
+            "step_s": step_time_s(roofline_terms, st, dev),
+            "step_j": step_energy_j(roofline_terms, st, dev),
+        })
+    return out

@@ -1,0 +1,109 @@
+"""Main-board aggregator (paper Sec. 4.1).
+
+One PIC18-based board per node: two I2C connectors, up to six probes
+daisy-chained per connector (12 max), 5 V USB power + data. The I2C bus is
+the bottleneck: with six probes on one bus the system sustains at most
+1000 SPS *per probe report stream*; oversubscription degrades the per-probe
+rate proportionally. Eight GPIO inputs tag samples with code regions.
+
+We model the board faithfully: bus budget enforcement, per-probe report
+streams, tag annotation at sample timestamps, and a host-side API
+(``read_samples``) mirroring the planned C API (paper Sec. 4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.probe import REPORT_SPS, Probe, Sample
+from repro.core.tags import TagBus
+
+N_I2C_BUSES = 2
+PROBES_PER_BUS = 6
+MAX_PROBES = N_I2C_BUSES * PROBES_PER_BUS
+BUS_MAX_SPS = PROBES_PER_BUS * REPORT_SPS   # paper: 1000 SPS with 6 probes
+
+
+class MainBoard:
+    """Aggregates up to 12 probes; attaches GPIO tags to samples."""
+
+    def __init__(self, node_name: str = "node", clock_t0: float = 0.0):
+        self.node_name = node_name
+        self._buses: List[List[Probe]] = [[], []]
+        self._tags = TagBus(clock=self._now)
+        self._t = clock_t0
+
+    # -- virtual clock (simulation time) ------------------------------------
+
+    def _now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float):
+        self._t += dt
+
+    @property
+    def tags(self) -> TagBus:
+        return self._tags
+
+    # -- probe management ----------------------------------------------------
+
+    def attach(self, probe: Probe, bus: Optional[int] = None) -> int:
+        if bus is None:
+            bus = 0 if len(self._buses[0]) <= len(self._buses[1]) else 1
+        if not 0 <= bus < N_I2C_BUSES:
+            raise ValueError(f"bus {bus} out of range")
+        if len(self._buses[bus]) >= PROBES_PER_BUS:
+            raise RuntimeError(
+                f"I2C bus {bus} full ({PROBES_PER_BUS} probes max — paper HW limit)")
+        self._buses[bus].append(probe)
+        return bus
+
+    @property
+    def n_probes(self) -> int:
+        return sum(len(b) for b in self._buses)
+
+    def effective_sps(self, bus: int) -> float:
+        """Per-probe report rate on a bus (I2C budget shared)."""
+        n = len(self._buses[bus])
+        if n == 0:
+            return 0.0
+        return min(REPORT_SPS, BUS_MAX_SPS / n)
+
+    # -- sampling ------------------------------------------------------------
+
+    def read_samples(self, duration: float) -> Dict[int, List[Sample]]:
+        """Advance time by ``duration`` and return per-probe samples with
+        the GPIO tags that were active at each sample timestamp."""
+        t0 = self._t
+        out: Dict[int, List[Sample]] = {}
+        pid = 0
+        for bus in self._buses:
+            for probe in bus:
+                samples = probe.read(t0, duration)
+                tagged = [dataclasses.replace(s, tags=self._tags.active_at(s.t))
+                          for s in samples]
+                out[pid] = tagged
+                pid += 1
+        self._t = t0 + duration
+        return out
+
+    # -- energy accounting ---------------------------------------------------
+
+    @staticmethod
+    def energy_j(samples: List[Sample]) -> float:
+        """Trapezoid-free: samples are averaged power over fixed intervals."""
+        if not samples:
+            return 0.0
+        dt = 1.0 / REPORT_SPS
+        return sum(s.watts for s in samples) * dt
+
+    @staticmethod
+    def energy_by_tag(samples: List[Sample]) -> Dict[str, float]:
+        """Per-tag energy attribution (paper Sec. 4.1: GPIO-synchronized
+        fine-grained profiling)."""
+        dt = 1.0 / REPORT_SPS
+        out: Dict[str, float] = {}
+        for s in samples:
+            for tag in s.tags:
+                out[tag] = out.get(tag, 0.0) + s.watts * dt
+        return out

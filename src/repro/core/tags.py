@@ -1,0 +1,92 @@
+"""GPIO region tagging (paper Sec. 4.1/4.3).
+
+The main board has eight GPIO inputs driven by the measured node, so running
+code can tag samples with the active code segment ("measure the consumption
+of a specific function"). We reproduce the exact constraint: at most 8
+concurrent binary channels; a tag is a named channel raised/lowered around a
+code region, and samples record the set of channels high at sample time.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+N_GPIO = 8
+
+
+class TagBus:
+    """The 8-channel GPIO bus between the node and its main board."""
+
+    def __init__(self, clock=time.monotonic):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._channels: Dict[str, int] = {}     # name -> gpio index
+        self._high: Dict[int, str] = {}         # gpio index -> name
+        self._events: List[Tuple[float, int, str, bool]] = []
+
+    def _alloc(self, name: str) -> int:
+        if name in self._channels:
+            return self._channels[name]
+        if len(self._channels) >= N_GPIO:
+            raise RuntimeError(
+                f"all {N_GPIO} GPIO tag channels in use (paper HW limit)")
+        idx = next(i for i in range(N_GPIO)
+                   if i not in self._channels.values())
+        self._channels[name] = idx
+        return idx
+
+    def raise_(self, name: str):
+        with self._lock:
+            idx = self._alloc(name)
+            self._high[idx] = name
+            self._events.append((self._clock(), idx, name, True))
+
+    def lower(self, name: str):
+        with self._lock:
+            idx = self._channels.get(name)
+            if idx is not None and idx in self._high:
+                del self._high[idx]
+                self._events.append((self._clock(), idx, name, False))
+
+    def active_at(self, t: float) -> Tuple[str, ...]:
+        """Tags high at time t (replays the event log)."""
+        high: Dict[int, str] = {}
+        for et, idx, name, up in self._events:
+            if et > t:
+                break
+            if up:
+                high[idx] = name
+            else:
+                high.pop(idx, None)
+        return tuple(sorted(high.values()))
+
+    def active_now(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._high.values()))
+
+    @contextlib.contextmanager
+    def tag(self, name: str):
+        """``with bus.tag("fwd"): ...`` — energy attribution for a region."""
+        self.raise_(name)
+        try:
+            yield
+        finally:
+            self.lower(name)
+
+    def intervals(self, name: str) -> List[Tuple[float, Optional[float]]]:
+        """(start, end) intervals for a tag; end=None if still high."""
+        out: List[Tuple[float, Optional[float]]] = []
+        start = None
+        for et, _, n, up in self._events:
+            if n != name:
+                continue
+            if up and start is None:
+                start = et
+            elif not up and start is not None:
+                out.append((start, et))
+                start = None
+        if start is not None:
+            out.append((start, None))
+        return out

@@ -1,0 +1,77 @@
+"""Dot-Product-Accumulate matmul Pallas kernel (paper Fig. 5/7, Sec. 5.2).
+
+The paper benchmarks FMA (f32/f64), DPA2 (2-way bf16/i16 -> f32/i32) and
+DPA4 (4-way i8 -> i32) — the CPU ancestors of the TPU MXU, which natively
+performs bf16xbf16->f32 and int8xint8->int32 systolic dot-product-
+accumulate. This kernel is the TPU-native adaptation: a VMEM-tiled matmul
+with an fp32/int32 accumulator scratch, K-blocked so the working set fits
+VMEM and the MXU dims stay 128-aligned.
+
+Variants (mirroring the paper's instruction sweep):
+    fma_f32:  f32 x f32 -> f32
+    dpa2:     bf16 x bf16 -> f32 accumulate   (AVX-VNNI bf16 analogue)
+    dpa4:     int8 x int8 -> int32 accumulate (AVX-VNNI i8 analogue)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_blocks, acc_dtype):
+    """Grid (M/bm, N/bn, K/bk); accumulate over the K axis in scratch."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_dtype)
+
+    @pl.when(kb == k_blocks - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def dpa_matmul(a, b, *, variant="dpa2", block_m=128, block_n=128,
+               block_k=256, interpret=False):
+    """a: [M,K], b: [K,N] -> [M,N] in the accumulator dtype.
+
+    variant: fma_f32 | dpa2 (bf16) | dpa4 (int8).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    if variant == "fma_f32":
+        in_dtype, acc_dtype, out_dtype = jnp.float32, jnp.float32, jnp.float32
+    elif variant == "dpa2":
+        in_dtype, acc_dtype, out_dtype = jnp.bfloat16, jnp.float32, jnp.float32
+    elif variant == "dpa4":
+        in_dtype, acc_dtype, out_dtype = jnp.int8, jnp.int32, jnp.int32
+    else:
+        raise ValueError(variant)
+    a = a.astype(in_dtype)
+    b = b.astype(in_dtype)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_matmul_kernel, k_blocks=grid[2],
+                               acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((bk, bn), lambda i, j, kb: (kb, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for dpa_matmul."""
+import jax.numpy as jnp
+
+
+def matmul(a, b, variant="dpa2"):
+    if variant == "fma_f32":
+        return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    if variant == "dpa2":
+        return jnp.dot(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    if variant == "dpa4":
+        return jnp.dot(a.astype(jnp.int8), b.astype(jnp.int8),
+                       preferred_element_type=jnp.int32)
+    raise ValueError(variant)

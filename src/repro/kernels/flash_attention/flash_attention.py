@@ -1,0 +1,97 @@
+"""Blocked online-softmax attention Pallas kernel (the framework's
+perf-critical attention hot-spot; VMEM-tiled for TPU).
+
+Grid: (batch*heads, q_blocks, kv_blocks) with the KV axis innermost so the
+running max / denominator / accumulator live in VMEM scratch across KV
+iterations (one-pass flash algorithm). Causal + sliding-window masks are
+applied from block coordinates; fully-masked KV blocks still execute in this
+baseline (the HLO-level block-skipping variant is a §Perf iteration).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  kv_blocks, block_q, block_kv, scale, causal, window):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # [bq, d]
+    k = k_ref[0].astype(jnp.float32)              # [bkv, d]
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = kb * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == kv_blocks - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_kv=128, interpret=False):
+    """q: [B,H,S,D]; k,v: [B,H,T,D] -> [B,H,S,D]. H already KV-repeated."""
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    bq = min(block_q, s)
+    bkv = min(block_kv, t)
+    assert s % bq == 0 and t % bkv == 0
+    grid = (b * h, s // bq, t // bkv)
+    scale = 1.0 / (d ** 0.5)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+    kernel = functools.partial(
+        _flash_kernel, kv_blocks=grid[2], block_q=bq, block_kv=bkv,
+        scale=scale, causal=causal, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # denominator
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

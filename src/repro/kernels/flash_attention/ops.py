@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the flash attention kernel."""
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def attention(q, k, v, causal=True, window=None, block_q=128, block_kv=128,
+              interpret=False):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_kv=block_kv,
+                           interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: exact softmax attention with causal/window masks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention(q, k, v, causal=True, window=None):
+    """q: [B,H,S,D]; k,v: [B,H,T,D]."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    sq, tk = q.shape[2], k.shape[2]
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((sq, tk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Jit'd wrappers for the STREAM kernels; bytes-moved accounting included
+(the benchmark derives GB/s exactly like the paper's `bandwidth` tool)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream import stream as k
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def copy(a, interpret=False):
+    return k.stream_copy(a, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scale(a, x, interpret=False):
+    return k.stream_scale(a, x, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def add(a, b, interpret=False):
+    return k.stream_add(a, b, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def triad(a, b, x, interpret=False):
+    return k.stream_triad(a, b, x, interpret=interpret)
+
+
+def bytes_moved(op: str, a) -> int:
+    n = a.size * a.dtype.itemsize
+    return {"read": n, "write": n, "copy": 2 * n, "scale": 2 * n,
+            "add": 3 * n, "triad": 3 * n}[op]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the STREAM suite (paper Sec. 5.1 semantics)."""
+import jax.numpy as jnp
+
+
+def copy(a):
+    return a
+
+
+def scale(a, x):
+    return a * jnp.asarray(x, a.dtype)
+
+
+def add(a, b):
+    return a + b
+
+
+def triad(a, b, x):
+    return jnp.asarray(x, a.dtype) * a + b
+
+
+def write(shape, x, dtype=jnp.float32):
+    return jnp.full(shape, x, dtype)
+
+
+def read(a, block_rows=256):
+    rows, cols = a.shape
+    block_rows = min(block_rows, rows)
+    return a.reshape(rows // block_rows, block_rows * cols).sum(
+        axis=1, keepdims=True)

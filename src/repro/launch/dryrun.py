@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, print memory/cost analysis, and record roofline inputs.
+
+Run:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-20b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in results/dryrun/<mesh>/<arch>__<shape>.json and are consumed
+by the roofline report (benchmarks/bench_roofline.py, EXPERIMENTS.md).
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_params, build_model, token_batch_specs
+from repro.perf import hlo_analysis, roofline
+from repro.serve.step import abstract_cache, cache_specs
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import OptConfig
+from repro.train.step import (TrainState, batch_specs, make_train_step,
+                              param_specs, state_specs, StepConfig)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# per-shape microbatching (keeps the per-device activation stash inside HBM;
+# see EXPERIMENTS.md §Perf for the iteration that chose these)
+N_MICRO = {"train_4k": 16}
+
+
+def serve_rules(cfg, shape, mesh):
+    """Cell-specific sharding-rule overrides for serving."""
+    rules = {}
+    model_size = mesh.shape.get("model", 1)
+    if shape.global_batch == 1:
+        # long-context decode, batch unshardable: sequence-shard the caches
+        rules["batch"] = None
+        rules["kv_seq"] = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    elif cfg.num_kv_heads % model_size != 0:
+        # GQA/MQA: too few KV heads for TP -> shard cache sequence instead
+        # (flash-decoding-style parallel KV)
+        rules["kv_seq"] = "model"
+    return rules
+
+
+FSDP_RULES = {
+    # pure ZeRO-3 layout: every param's embed dim + the batch sharded over
+    # the WHOLE mesh; no tensor parallelism (no activation all-reduces)
+    "embed": ("pod", "data", "model"),
+    "vocab": None, "heads": None, "kv_heads": None, "mlp": None,
+    "experts": None, "ssm_inner": None,
+    "batch": ("pod", "data", "model"),
+    "act_heads": None, "act_kv_heads": None, "act_experts": None,
+    "act_vocab": None, "act_mlp": None,
+}
+
+EP_RULES = {
+    # MoE hybrid: ZeRO-3 everywhere (batch + param embed dims over the whole
+    # mesh) EXCEPT experts, which shard over ``model`` and run via shard_map
+    # all-to-all EP — no TP activation all-reduces, no expert-weight gathers,
+    # dense compute fully data-parallel
+    "embed": ("pod", "data", "model"),
+    "vocab": None, "heads": None, "kv_heads": None, "mlp": None,
+    "experts": "model", "ssm_inner": None,
+    "batch": ("pod", "data", "model"),
+    "act_heads": None, "act_kv_heads": None, "act_experts": None,
+    "act_vocab": None, "act_mlp": None,
+}
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant=None):
+    """Returns (jitted_fn, abstract_args, cfg, shape, static_info).
+
+    variant (perf hillclimbing): {layout: "2d"|"fsdp", n_micro: int,
+    cast_once: bool, barrier: bool}.
+    """
+    variant = variant or {}
+    cfg = configs.get(arch).adapt_for_mesh(mesh.shape.get("model", 1))
+    shape = SHAPES[shape_name]
+    n_pods = mesh.shape.get("pod", 1)
+    n_chips = mesh.devices.size
+
+    if shape.kind == "train":
+        layout = variant.get("layout", "2d")
+        rules = None
+        if layout == "fsdp":
+            rules = dict(FSDP_RULES)
+        elif layout == "ep":
+            rules = dict(EP_RULES)
+            variant = dict(variant, moe_shard_map=1, n_micro=1)
+        if rules is not None:
+            # drop axes absent from this mesh
+            rules = {k: (tuple(a for a in v if a in mesh.shape)
+                         if isinstance(v, tuple) else v)
+                     for k, v in rules.items()}
+            if layout == "fsdp":
+                assert shape.global_batch % n_chips == 0, \
+                    "fsdp layout needs batch divisible by chip count"
+        model_kw = dict(shd_rules=rules, barrier=variant.get("barrier", False))
+        if variant.get("scores_bf16") and cfg.family in ("dense", "moe", "vlm"):
+            model_kw["scores_f32"] = False
+        if variant.get("carry_barrier") and cfg.family in ("dense", "moe", "vlm"):
+            model_kw["carry_barrier"] = True
+        if variant.get("moe_shard_map") and cfg.is_moe:
+            model_kw["moe_impl"] = "shard_map"
+        model = build_model(cfg, mesh, **model_kw)
+        params_sds, axes = abstract_params(model)
+        opt_sds = opt_mod.abstract_opt_state(params_sds)
+        state_sds = TrainState(params_sds, opt_sds)
+        batch_sds = token_batch_specs(cfg, shape)
+        dp_total = n_chips // mesh.shape.get("model", 1)
+        default_micro = 1 if layout == "fsdp" else min(
+            N_MICRO.get(shape_name, 8),
+            max(shape.global_batch // (dp_total or 1), 1))
+        n_micro = variant.get("n_micro", default_micro)
+        step_cfg = StepConfig(num_microbatches=n_micro,
+                              cast_params_once=variant.get("cast_once", False),
+                              vocab_chunks=variant.get("vocab_chunks", 1))
+        fn = make_train_step(model, OptConfig(), step_cfg)
+        in_shardings = (
+            jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                         state_specs(mesh, params_sds, axes, rules),
+                         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
+            jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                         batch_specs(mesh, batch_sds, rules),
+                         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
+        )
+        jitted = jax.jit(fn, in_shardings=in_shardings, donate_argnums=(0,))
+        args = (state_sds, batch_sds)
+        info = {"kind": "train", "n_micro": n_micro, "layout": layout,
+                "variant": {k: v for k, v in variant.items()}}
+        return jitted, args, cfg, shape, info
+
+    # serving cells: bf16 params
+    scfg = cfg.replace(param_dtype="bfloat16")
+    model = build_model(scfg, mesh)
+    params_sds, axes = abstract_params(model)
+    rules = serve_rules(scfg, shape, mesh)
+    pspecs = param_specs(mesh, params_sds, axes, rules)
+    psh = jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    max_seq = shape.seq_len + (
+        scfg.stub_prefix_len if scfg.family == "vlm" else 0)
+    cache_sds = abstract_cache(model, shape.global_batch, max_seq)
+    cspecs = cache_specs(mesh, model, cache_sds, rules)
+    csh = jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s), cspecs,
+                       is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    if shape.kind == "prefill":
+        batch_sds = token_batch_specs(scfg, shape)
+        bsh = jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                           batch_specs(mesh, batch_sds, rules),
+                           is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        fn = lambda p, b, c: model.prefill(p, b, c)
+        jitted = jax.jit(fn, in_shardings=(psh, bsh, csh),
+                         donate_argnums=(2,))
+        args = (params_sds, batch_sds, cache_sds)
+        return jitted, args, scfg, shape, {"kind": "prefill", "rules": str(rules)}
+
+    # decode: one new token against a cache of seq_len
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_spec = batch_specs(mesh, tok_sds, rules)
+    tsh = jax.sharding.NamedSharding(mesh, tok_spec)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(p, tok, pos, c):
+        return model.decode_step(p, tok, pos, c)
+
+    jitted = jax.jit(fn, in_shardings=(psh, tsh, None, csh),
+                     donate_argnums=(3,))
+    args = (params_sds, tok_sds, pos_sds, cache_sds)
+    return jitted, args, scfg, shape, {"kind": "decode", "rules": str(rules)}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force=False):
+    out_dir = RESULTS / mesh_kind
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}__{shape_name}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        if "error" not in rec:
+            print(f"[skip] {mesh_kind}/{arch}/{shape_name} (cached)")
+            return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    pod_block = 256 if mesh_kind == "multi" else None
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "n_chips": n_chips}
+    try:
+        jitted, args, cfg, shape, info = build_cell(arch, shape_name, mesh)
+        rec.update(info)
+        with mesh:
+            t_l = time.time()
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = time.time() - t_l
+            t_c = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.time() - t_c
+            print(compiled.memory_analysis())
+            t_kv = shape.seq_len + (
+                cfg.stub_prefix_len if cfg.family == "vlm" else 0)
+            analysis = hlo_analysis.analyze(compiled, pod_block,
+                                            fused_attn_shapes=(512, t_kv))
+            ca = compiled.cost_analysis()
+            print({k: v for k, v in (ca[0] if isinstance(ca, list) else ca).items()
+                   if k in ("flops", "bytes accessed")})
+        if shape.kind == "train":
+            params_sds = args[0].params
+        else:
+            params_sds = args[0]
+        n_total = roofline.count_params(params_sds)
+        n_active = roofline.active_params(cfg, n_total)
+        mf = roofline.model_flops(cfg, shape, n_active)
+        rl = roofline.compute_roofline(analysis, n_chips, mf)
+        rec.update(analysis=analysis, roofline=rl.to_dict(),
+                   n_params=n_total, n_params_active=n_active,
+                   wall_s=time.time() - t0)
+        hbm_gb = (analysis["memory"]["argument_bytes"]
+                  + analysis["memory"]["temp_bytes"]) / 2**30
+        rec["hbm_per_device_gb"] = hbm_gb
+        rec["hbm_adjusted_gb"] = hbm_gb - analysis.get(
+            "f32_hoist_bytes", 0.0) / 2**30
+        mem_k = (analysis["bytes_accessed"]
+                 - analysis.get("attn_score_bytes", 0.0)) / roofline.HBM_BW
+        rec["memory_s_with_kernel"] = mem_k
+        t_k = max(rl.compute_s, mem_k, rl.collective_s)
+        rec["roofline_frac_with_kernel"] = rl.compute_s / t_k if t_k else 0.0
+        print(f"[ok] {mesh_kind}/{arch}/{shape_name}: "
+              f"dominant={rl.dominant} useful={rl.useful_ratio:.2f} "
+              f"hbm={hbm_gb:.2f}GiB wall={rec['wall_s']:.0f}s")
+    except Exception as e:  # noqa
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        rec["wall_s"] = time.time() - t0
+        print(f"[FAIL] {mesh_kind}/{arch}/{shape_name}: {rec['error'][:300]}")
+    out_path.write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        cells = list(configs.all_cells())
+    else:
+        shapes = [args.shape] if args.shape else list(
+            configs.shape_cells(args.arch))
+        cells = [(args.arch, s) for s in shapes]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, mesh_kind, force=args.force)
+            failures += 1 if "error" in rec else 0
+    print(f"done: {len(cells) * len(meshes)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

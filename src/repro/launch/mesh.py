@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 TPU v5e chips on ICI.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis is the
+slow inter-pod (DCN) link, DALEK's 2.5 GbE analogue: only data-parallel
+gradient reductions cross it.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    axes = ("pod", "data", "model")
+    shape = (pod, data, model)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * 3)

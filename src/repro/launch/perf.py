@@ -1,0 +1,111 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: compile a (cell × variant), record the three
+roofline terms, and append to the iteration log.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch granite-20b \
+        --shape train_4k --variant layout=fsdp,cast_once=1 --tag zero3
+"""
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.perf import hlo_analysis, roofline
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "perf"
+
+
+def parse_variant(s):
+    out = {}
+    if not s:
+        return out
+    for kv in s.split(","):
+        k, v = kv.split("=")
+        if v.isdigit():
+            v = int(v)
+        elif v in ("true", "false"):
+            v = v == "true"
+        out[k] = v
+    for b in ("cast_once", "barrier"):
+        if b in out:
+            out[b] = bool(out[b])
+    return out
+
+
+def run_variant(arch, shape_name, variant, tag, mesh_kind="single",
+                save_hlo=None):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    pod_block = 256 if mesh_kind == "multi" else None
+    t0 = time.time()
+    jitted, args, cfg, shape, info = build_cell(arch, shape_name, mesh,
+                                                variant)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    q_block = 512
+    t_kv = shape.seq_len + (cfg.stub_prefix_len if cfg.family == "vlm" else 0)
+    analysis = hlo_analysis.analyze(compiled, pod_block,
+                                    fused_attn_shapes=(q_block, t_kv))
+    if save_hlo:
+        pathlib.Path(save_hlo).write_text(compiled.as_text())
+    params_sds = args[0].params if shape.kind == "train" else args[0]
+    n_total = roofline.count_params(params_sds)
+    n_active = roofline.active_params(cfg, n_total)
+    mf = roofline.model_flops(cfg, shape, n_active)
+    rl = roofline.compute_roofline(analysis, mesh.devices.size, mf)
+    # "with flash kernel": score buffers live in VMEM on the TPU deployment
+    mem_kernel_s = (analysis["bytes_accessed"]
+                    - analysis["attn_score_bytes"]) / roofline.HBM_BW
+    t_step = max(rl.compute_s, rl.memory_s, rl.collective_s)
+    t_step_k = max(rl.compute_s, mem_kernel_s, rl.collective_s)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "variant": variant, "info": info,
+        "roofline": rl.to_dict(),
+        "t_step_overlap_s": t_step,
+        "roofline_frac": rl.compute_s / t_step if t_step else 0.0,
+        "memory_s_with_kernel": mem_kernel_s,
+        "roofline_frac_with_kernel": rl.compute_s / t_step_k if t_step_k else 0.0,
+        "hbm_gb": (analysis["memory"]["argument_bytes"]
+                   + analysis["memory"]["temp_bytes"]) / 2**30,
+        "hbm_adjusted_gb": (analysis["memory"]["argument_bytes"]
+                            + analysis["memory"]["temp_bytes"]
+                            - analysis.get("f32_hoist_bytes", 0.0)) / 2**30,
+        "collectives": analysis["collectives"],
+        "wall_s": time.time() - t0,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / f"{arch}__{shape_name}__{tag}.json"
+    out.write_text(json.dumps(rec, indent=2, default=float))
+    print(f"[{tag}] {arch}/{shape_name}: compute={rl.compute_s:.2f}s "
+          f"memory={rl.memory_s:.2f}s (kernel:{mem_kernel_s:.2f}s) "
+          f"collective={rl.collective_s:.2f}s "
+          f"dom={rl.dominant} frac={rec['roofline_frac']:.3f} "
+          f"(kernel:{rec['roofline_frac_with_kernel']:.3f}) "
+          f"hbm={rec['hbm_gb']:.1f}GiB useful={rl.useful_ratio:.2f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+    run_variant(args.arch, args.shape, parse_variant(args.variant), args.tag,
+                args.mesh, args.save_hlo)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.registry import abstract_params, build_model, token_batch_specs

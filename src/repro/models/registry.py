@@ -1,0 +1,50 @@
+"""Model registry: config -> model instance + abstract input specs.
+
+``input_specs(cfg, shape, mesh)`` returns ShapeDtypeStruct stand-ins for every
+model input of a given assigned shape cell — weak-type-correct, shardable, no
+device allocation — consumed by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.mamba2 import Zamba2
+from repro.models.transformer import DecoderLM
+from repro.models.whisper import Whisper
+from repro.models.xlstm import XLSTM
+
+
+def build_model(cfg: ModelConfig, mesh=None, **kw):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, mesh, **kw)
+    if cfg.family == "ssm":
+        return XLSTM(cfg, mesh, **kw)
+    if cfg.family == "hybrid":
+        return Zamba2(cfg, mesh, **kw)
+    if cfg.family == "audio":
+        return Whisper(cfg, mesh, **kw)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def abstract_params(model):
+    """(ShapeDtypeStruct params tree, logical-axes tree) without allocation."""
+    return model.init(None)  # ParamBuilder abstract mode
+
+
+def token_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Training/prefill batch ShapeDtypeStructs for this arch."""
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patch_embeddings"] = jax.ShapeDtypeStruct(
+            (b, cfg.stub_prefix_len, cfg.d_model), jnp.bfloat16)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return batch

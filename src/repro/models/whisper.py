@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, enc_seq, D]. Positions are
+sinusoidal for both encoder and decoder (the learned decoder table is
+replaced so that arbitrary assigned decode lengths lower without a
+config-coupled table size; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import ParamBuilder
+from repro.parallel.sharding import Sharder
+
+
+def sinusoid(positions, d_model, dtype):
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _cross_attn_init(pb: ParamBuilder, cfg: ModelConfig, L):
+    d, h, dh = cfg.d_model, cfg.q_heads, cfg.head_dim
+    pre, pax = (L,), ("layers",)
+    pb.dense("wq", pre + (d, h, dh), pax + ("embed", "heads", "head_dim"), fan_in=d)
+    pb.dense("wk", pre + (d, h, dh), pax + ("embed", "heads", "head_dim"), fan_in=d)
+    pb.dense("wv", pre + (d, h, dh), pax + ("embed", "heads", "head_dim"), fan_in=d)
+    pb.dense("wo", pre + (h, dh, d), pax + ("heads", "head_dim", "embed"), fan_in=h * dh)
+
+
+def cross_kv(enc_out, p):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def cross_attention(x, p, k, v, cfg, shd: Sharder):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q = shd(q, "batch", "seq", "act_heads", None)
+    dh = q.shape[-1]
+    s = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / np.sqrt(dh)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhst,bthd->bshd", pr, v)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return shd(out, "batch", "seq", "act_embed")
+
+
+class Whisper:
+    def __init__(self, cfg: ModelConfig, mesh=None, *, attn_impl="blocked",
+                 q_block=512, remat=True, shd_rules=None, barrier=False):
+        self.cfg = cfg
+        self.shd = Sharder(mesh, rules=shd_rules, barrier=barrier)
+        self.attn_impl = attn_impl
+        self.q_block = q_block
+        self.remat = remat
+
+    def init(self, key):
+        cfg = self.cfg
+        pb = ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+        common.embed_init(pb, cfg)
+        # encoder
+        eb = pb.child("encoder")
+        eb.dense("norm1", (cfg.enc_layers, cfg.d_model), ("layers", "norm"), zero=True)
+        eb.dense("norm2", (cfg.enc_layers, cfg.d_model), ("layers", "norm"), zero=True)
+        ab = eb.child("attn")
+        common.attn_init(ab, cfg, cfg.enc_layers)
+        mb = eb.child("mlp")
+        common.mlp_init(mb, cfg.d_model, cfg.d_ff, cfg.enc_layers)
+        pb.dense("enc_final_norm", (cfg.d_model,), ("norm",), zero=True)
+        # decoder
+        db = pb.child("decoder")
+        db.dense("norm1", (cfg.num_layers, cfg.d_model), ("layers", "norm"), zero=True)
+        db.dense("norm_x", (cfg.num_layers, cfg.d_model), ("layers", "norm"), zero=True)
+        db.dense("norm2", (cfg.num_layers, cfg.d_model), ("layers", "norm"), zero=True)
+        sb = db.child("self_attn")
+        common.attn_init(sb, cfg, cfg.num_layers)
+        xb = db.child("cross_attn")
+        _cross_attn_init(xb, cfg, cfg.num_layers)
+        fb = db.child("mlp")
+        common.mlp_init(fb, cfg.d_model, cfg.d_ff, cfg.num_layers)
+        return pb.build()
+
+    # -- encoder -------------------------------------------------------------
+
+    def encode(self, params, frames):
+        """frames: [B, enc_seq, D] precomputed embeddings (stub frontend)."""
+        cfg, shd = self.cfg, self.shd
+        dtype = jnp.dtype(cfg.dtype)
+        x = frames.astype(dtype)
+        positions = jnp.arange(x.shape[1])
+        x = x + sinusoid(positions, cfg.d_model, dtype)[None]
+        x = shd(x, "batch", "seq", "act_embed")
+
+        def body(carry, p):
+            xc = carry
+            h, _ = common.attention(
+                common.rms_norm(xc, p["norm1"]), p["attn"], cfg, shd,
+                positions=positions, causal=False, impl=self.attn_impl,
+                q_block=self.q_block, use_rope=False)
+            xc = xc + h
+            xc = xc + common.mlp(common.rms_norm(xc, p["norm2"]), p["mlp"], shd)
+            return xc, None
+
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = lax.scan(body, x, params["encoder"])
+        return common.rms_norm(x, params["enc_final_norm"])
+
+    # -- decoder -------------------------------------------------------------
+
+    def _decoder_stack(self, x, params, enc_out, *, positions, caches=None,
+                       cache_pos=None, cross_cache=None):
+        cfg, shd = self.cfg, self.shd
+        del enc_out  # decoder consumes the precomputed cross_cache
+        dp = params["decoder"]
+
+        def body(carry, inp):
+            xc = carry
+            if caches is None:
+                p, xk, xv = inp
+                c, cpos = None, None
+            else:
+                p, xk, xv, sk, sv = inp
+                c, cpos = (sk, sv), cache_pos
+            h, nc = common.attention(
+                common.rms_norm(xc, p["norm1"]), p["self_attn"], cfg, shd,
+                positions=positions, impl=self.attn_impl,
+                q_block=self.q_block, use_rope=False, kv_cache=c,
+                cache_pos=cpos)
+            xc = xc + h
+            xc = xc + cross_attention(
+                common.rms_norm(xc, p["norm_x"]), p["cross_attn"], xk, xv,
+                cfg, shd)
+            xc = xc + common.mlp(common.rms_norm(xc, p["norm2"]), p["mlp"], shd)
+            y = None if nc is None else nc
+            return xc, y
+
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        xk_all, xv_all = cross_cache
+        if caches is None:
+            x, _ = lax.scan(body, x, (dp, xk_all, xv_all))
+            return x, None
+        x, ys = lax.scan(body, x, (dp, xk_all, xv_all, caches[0], caches[1]))
+        return x, ys
+
+    def _embed_dec(self, params, tokens, positions):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = common.embed(tokens, params, dtype)
+        x = x + sinusoid(positions, cfg.d_model, dtype)[None]
+        return self.shd(x, "batch", "seq", "act_embed")
+
+    def build_cross_cache(self, params, enc_out):
+        """Precompute per-layer cross K/V: [L, B, enc_seq, H, Dh]."""
+        return jax.vmap(lambda p: cross_kv(enc_out, p))(
+            params["decoder"]["cross_attn"])
+
+    def forward(self, params, batch):
+        """batch: {frames: [B,enc_seq,D], tokens: [B,S]}."""
+        enc_out = self.encode(params, batch["frames"])
+        cross_cache = self.build_cross_cache(params, enc_out)
+        positions = jnp.arange(batch["tokens"].shape[1])
+        x = self._embed_dec(params, batch["tokens"], positions)
+        x, _ = self._decoder_stack(x, params, enc_out, positions=positions,
+                                   cross_cache=cross_cache)
+        return common.unembed(x, params, self.shd), 0.0
+
+    def init_cache(self, batch_size, max_seq, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        self_shape = (cfg.num_layers, batch_size, max_seq, cfg.num_kv_heads,
+                      cfg.head_dim)
+        cross_shape = (cfg.num_layers, batch_size, cfg.enc_seq, cfg.q_heads,
+                       cfg.head_dim)
+        return {
+            "self": (jnp.zeros(self_shape, dtype), jnp.zeros(self_shape, dtype)),
+            "cross": (jnp.zeros(cross_shape, dtype), jnp.zeros(cross_shape, dtype)),
+        }
+
+    def cache_axes(self):
+        ax_self = ("layers", "batch", "kv_seq", "act_kv_heads", None)
+        ax_cross = ("layers", "batch", None, "act_heads", None)
+        return {"self": (ax_self, ax_self), "cross": (ax_cross, ax_cross)}
+
+    def prefill(self, params, batch, caches):
+        enc_out = self.encode(params, batch["frames"])
+        xk, xv = self.build_cross_cache(params, enc_out)
+        caches = dict(caches)
+        caches["cross"] = (xk.astype(caches["cross"][0].dtype),
+                           xv.astype(caches["cross"][1].dtype))
+        positions = jnp.arange(batch["tokens"].shape[1])
+        x = self._embed_dec(params, batch["tokens"], positions)
+        x, ys = self._decoder_stack(x, params, enc_out, positions=positions,
+                                    caches=caches["self"], cache_pos=0,
+                                    cross_cache=caches["cross"])
+        caches["self"] = ys
+        return common.unembed(x[:, -1:], params, self.shd), caches
+
+    def decode_step(self, params, token, pos, caches):
+        cfg = self.cfg
+        positions = jnp.array([0], jnp.int32) + pos
+        x = self._embed_dec(params, token, positions)
+        cc = (caches["cross"][0].astype(jnp.dtype(cfg.dtype)),
+              caches["cross"][1].astype(jnp.dtype(cfg.dtype)))
+        x, ys = self._decoder_stack(x, params, None, positions=positions,
+                                    caches=caches["self"], cache_pos=pos,
+                                    cross_cache=cc)
+        caches = dict(caches, self=ys)
+        return common.unembed(x, params, self.shd), caches

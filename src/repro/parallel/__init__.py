@@ -1,0 +1,1 @@
+from repro.parallel.sharding import LOGICAL_RULES, Sharder, spec_for

@@ -1,0 +1,160 @@
+"""Logical-axis sharding: maps model-declared logical axes onto mesh axes.
+
+The framework mirrors the paper's cluster structure: a fast intra-pod network
+(the ``data``/``model`` mesh axes — ICI) and a slow inter-pod network (the
+``pod`` axis — DALEK's 2.5 GbE analogue). Parameters are FSDP-sharded over
+``data`` and tensor-parallel over ``model``; the ``pod`` axis only carries
+data parallelism (gradient all-reduce, optionally compressed — see
+``repro.parallel.compress``).
+
+Every parameter and key activation declares *logical* axes (e.g.
+``("layers", "embed", "heads", "head_dim")``); :func:`spec_for` resolves them
+to a :class:`PartitionSpec` with divisibility checks, so the same model code
+lowers on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> preferred mesh axis (None = replicate)
+LOGICAL_RULES = {
+    # parameter axes
+    "layers": None,          # scan axis, never sharded
+    "vocab": "model",        # TP over vocabulary (embed + unembed + logits)
+    "embed": "data",         # FSDP: weight-shard d_model over the data axis
+    "heads": "model",        # TP over attention heads
+    "kv_heads": "model",     # TP over KV heads (dropped when indivisible: MQA)
+    "head_dim": None,
+    "mlp": "model",          # TP over FFN hidden
+    "experts": "model",      # EP: experts over the model axis
+    "expert_mlp": None,      # per-expert FFN hidden stays local
+    "ssm_inner": "model",    # TP over SSM inner channels
+    "ssm_state": None,
+    "conv_width": None,
+    "norm": None,
+    # activation axes
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,          # overridden to "model" for seq-sharded caches
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_experts": "model",
+    "act_vocab": "model",
+    "act_mlp": "model",
+    "qblock": None,
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def spec_for(
+    mesh: Mesh,
+    logical_axes: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+    rules: Optional[dict] = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec.
+
+    Mesh axes are dropped when (a) already used by an earlier dim or (b) the
+    dim size is known and not divisible by the mesh axis size.
+    """
+    rules = {**LOGICAL_RULES, **(rules or {})}
+    used = set()
+    out = []
+    for i, lax_name in enumerate(logical_axes):
+        mesh_axis = rules.get(lax_name) if lax_name is not None else None
+        if mesh_axis is None:
+            out.append(None)
+            continue
+        flat = tuple(mesh_axis) if isinstance(mesh_axis, (tuple, list)) else (mesh_axis,)
+        # only keep sub-axes present in this mesh, unused, and divisible
+        keep = []
+        for a in flat:
+            if a not in mesh.shape or a in used:
+                continue
+            keep.append(a)
+        if shape is not None:
+            size = 1
+            for a in keep:
+                size *= mesh.shape[a]
+            while keep and size > 0 and shape[i] % size != 0:
+                dropped = keep.pop()
+                size //= mesh.shape[dropped]
+        if not keep:
+            out.append(None)
+        else:
+            used.update(keep)
+            out.append(tuple(keep) if len(keep) > 1 else keep[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+class Sharder:
+    """Applies activation sharding constraints; no-op without a mesh.
+
+    Model code calls ``shd(x, "batch", "seq", "act_heads", None)`` at layer
+    boundaries; on a real mesh this pins the GSPMD propagation, on a single
+    device (smoke tests) it is the identity.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None, rules: Optional[dict] = None,
+                 barrier: bool = False):
+        self.mesh = mesh
+        self.rules = rules
+        # pin block-output dtype across the sharding boundary: stops XLA from
+        # hoisting f32 converts above the TP all-reduce (halves its volume)
+        self.barrier = barrier
+
+    def spec(self, logical_axes, shape=None) -> P:
+        assert self.mesh is not None
+        return spec_for(self.mesh, logical_axes, shape, self.rules)
+
+    def __call__(self, x, *logical_axes):
+        if self.mesh is None or self.mesh.empty:
+            return x
+        spec = spec_for(self.mesh, logical_axes, x.shape, self.rules)
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+        if self.barrier and "act_embed" in logical_axes:
+            x = jax.lax.optimization_barrier(x)
+        return x
+
+    def named(self, spec: P):
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, spec)
+
+
+def tree_specs(mesh: Mesh, axes_tree, shape_tree=None, rules=None):
+    """Map a pytree of logical-axis tuples (+ optional shapes) to PartitionSpecs."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda axes: spec_for(mesh, axes, None, rules),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x
+            ),
+        )
+    return jax.tree.map(
+        lambda axes, shp: spec_for(mesh, axes, shp, rules),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )

@@ -1,0 +1,125 @@
+"""Per-cell profile: top collective and memory contributors with loop
+multipliers — the 'profiler' for the hypothesis -> change -> measure loop
+(§Perf). Works from the compiled HLO text of a dry-run cell.
+
+    PYTHONPATH=src python -m repro.perf.diagnose --arch granite-20b \
+        --shape train_4k --mesh single
+"""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from repro.perf import hlo_cost
+
+
+def walk_with_multipliers(mc: hlo_cost.ModuleCost):
+    """Yield (comp_name, multiplier) reachable from entry (while-aware)."""
+    out = defaultdict(float)
+
+    def walk(name, m):
+        out[name] += m
+        comp = mc.comps.get(name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if ins.op == "while":
+                t = hlo_cost._TRIP.search(ins.rest)
+                trips = int(t.group(1)) if t else 1
+                for rx in (hlo_cost._WHILE_BODY, hlo_cost._WHILE_COND):
+                    mm = rx.search(ins.rest)
+                    if mm:
+                        walk(mm.group(1), m * trips)
+
+    walk(mc.entry, 1.0)
+    return out
+
+
+def report(text: str, pod_block=None, top=15):
+    mc = hlo_cost.ModuleCost(text, pod_block)
+    mult = walk_with_multipliers(mc)
+
+    coll_rows, mem_rows, flop_rows = [], [], []
+    for name, m in mult.items():
+        comp = mc.comps[name]
+        for ins in comp.instrs:
+            base = ins.op.replace("-start", "")
+            if base in hlo_cost.COLLECTIVE_OPS and not ins.op.endswith("-done"):
+                b, g, crosses = hlo_cost._parse_collective(ins, mc.pod_block)
+                coll_rows.append((b * m, base, g, crosses, m,
+                                  ins.type_str[:48]))
+            if base in hlo_cost._SKIP_BYTES_OPS or base == "while":
+                continue
+            mem_rows.append((mc._instr_bytes(comp, ins) * m, ins.op,
+                             m, ins.type_str[:48], ins.name[:40]))
+            if base in ("dot", "dot-general", "fusion", "call"):
+                sub = hlo_cost._CALLS.search(ins.rest)
+                fl = 0.0
+                if base in ("dot", "dot-general"):
+                    tot = hlo_cost.CostTotals()
+                    # reuse comp_cost pieces: quick local dot flops
+                    res = 1
+                    for d in hlo_cost._shape_dims(ins.type_str):
+                        res *= d
+                    lhs_c = hlo_cost._LHS_C.search(ins.rest)
+                    contract = 1
+                    names = hlo_cost._OPERAND.findall(
+                        ins.rest.split(")", 1)[0])
+                    if lhs_c and names:
+                        dims = hlo_cost._shape_dims(
+                            mc._resolve_type(comp, names[0]))
+                        for idx in lhs_c.group(1).split(","):
+                            if idx and int(idx) < len(dims):
+                                contract *= dims[int(idx)]
+                    fl = 2.0 * res * contract
+                elif sub:
+                    fl = mc.comp_cost(sub.group(1)).flops
+                if fl:
+                    flop_rows.append((fl * m, ins.op, m, ins.type_str[:40],
+                                      ins.name[:40]))
+
+    lines = []
+    totals = mc.totals()
+    coll_total = sum(r[0] for r in coll_rows)
+    lines.append(f"== totals: flops={totals.flops:.3e} bytes={totals.bytes:.3e} "
+                 f"collective_bytes={coll_total:.3e}")
+    lines.append("-- top collectives (bytes x count):")
+    for b, op, g, crosses, m, t in sorted(coll_rows, reverse=True)[:top]:
+        lines.append(f"  {b:10.3e}  {op:<18} g={g:<4} x{m:<6.0f} "
+                     f"{'DCN' if crosses else 'ici'}  {t}")
+    lines.append("-- top memory instructions:")
+    for b, op, m, t, nm in sorted(mem_rows, reverse=True)[:top]:
+        lines.append(f"  {b:10.3e}  {op:<18} x{m:<6.0f} {t}  {nm}")
+    lines.append("-- top flops instructions:")
+    for f, op, m, t, nm in sorted(flop_rows, reverse=True)[:top]:
+        lines.append(f"  {f:10.3e}  {op:<18} x{m:<6.0f} {t}  {nm}")
+    return "\n".join(lines)
+
+
+def main():
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    jitted, cargs, cfg, shape, info = build_cell(args.arch, args.shape, mesh)
+    with mesh:
+        compiled = jitted.lower(*cargs).compile()
+    print(compiled.memory_analysis())
+    text = compiled.as_text()
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(text)
+    print(report(text, 256 if args.mesh == "multi" else None, args.top))
+
+
+if __name__ == "__main__":
+    main()

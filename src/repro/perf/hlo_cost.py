@@ -1,0 +1,609 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+under-counts scanned layers / gradient-accumulation loops by orders of
+magnitude. This walker parses the optimized HLO text, resolves the call graph
+(fusions, while bodies with ``known_trip_count``, conditionals), and
+accumulates:
+
+  - FLOPs: 2 * prod(result_dims) * prod(contracting_dims) per dot,
+  - bytes: operands + result per top-level instruction (fusion internals are
+    VMEM-resident, standard cost-analysis assumption),
+  - collectives: per-op traffic with replica-group sizes, multiplied by the
+    enclosing loops' trip counts, split intra-pod (ICI) vs cross-pod (DCN).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.*)\s*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[\w\[\]{},]+))\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](T\(([\d,]+)\))?")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dtype_ratio(src_type: str, res_type: str) -> float:
+    """itemsize(src)/itemsize(res), capped at 1.0 (never inflate)."""
+    ms = _SHAPE.search(src_type)
+    mr = _SHAPE.search(res_type)
+    if not ms or not mr:
+        return 1.0
+    s = _DTYPE_BYTES.get(ms.group(1), 4)
+    r = _DTYPE_BYTES.get(mr.group(1), 4)
+    return min(s / r, 1.0) if r else 1.0
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str  # full remainder of the line (operands + attributes)
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]          # param name -> type
+    instrs: List[Instr]
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and ("->" in line):
+                params = {}
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|[\w\[\]{},]+)",
+                                      m.group(2)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(1), params, [])
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR.match(line)
+        if im:
+            rest = line[im.end():]
+            cur.instrs.append(Instr(im.group(1), im.group(2), im.group(3), rest,
+                                    "ROOT " in line[:16]))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+@dataclasses.dataclass
+class CollectiveRec:
+    op: str
+    bytes_moved: float   # per-device link traffic for ONE execution
+    group_size: int
+    crosses_pod: bool
+    count: float         # executions (includes loop trip counts)
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    attn_score_bytes: float = 0.0   # HBM traffic the flash kernel keeps in VMEM
+    collectives: List[CollectiveRec] = dataclasses.field(default_factory=list)
+
+
+def _parse_collective(instr: Instr, pod_block: Optional[int]
+                      ) -> Tuple[float, int, bool]:
+    result_bytes = _shape_bytes(instr.type_str)
+    gsize, crosses = 1, False
+    m = _IOTA.search(instr.rest)
+    if m:
+        gsize = int(m.group(2))
+        if pod_block:
+            # evaluate the iota replica-group list EXACTLY:
+            # groups = iota(dims).transpose(perm).reshape(n_groups, g_size)
+            import numpy as _np
+            n_groups = int(m.group(1))
+            dims = [int(d) for d in m.group(3).split(",") if d]
+            ids = _np.arange(int(_np.prod(dims))).reshape(dims)
+            if m.group(4):
+                perm = [int(p) for p in m.group(5).split(",")]
+                ids = ids.transpose(perm)
+            groups = ids.reshape(n_groups, gsize)
+            crosses = bool(((groups // pod_block).max(axis=1)
+                            != (groups // pod_block).min(axis=1)).any())
+    else:
+        m = _GROUPS.search(instr.rest)
+        if m:
+            first = m.group(1).split("},{")[0].strip("{}")
+            ids = [int(x) for x in first.split(",") if x.strip()]
+            gsize = max(len(ids), 1)
+            if pod_block and ids:
+                crosses = (min(ids) // pod_block) != (max(ids) // pod_block)
+    g = max(gsize, 1)
+    op = instr.op.replace("-start", "")
+    if op == "all-gather":
+        b = result_bytes * (g - 1) / g
+    elif op == "all-reduce":
+        b = 2 * result_bytes * (g - 1) / g
+    elif op == "reduce-scatter":
+        b = result_bytes * (g - 1)
+    elif op == "all-to-all":
+        b = result_bytes * (g - 1) / g
+    else:
+        b = result_bytes
+    return b, g, crosses
+
+
+class ModuleCost:
+    def __init__(self, text: str, pod_block: Optional[int] = None,
+                 fused_attn_shapes: Optional[Tuple[int, int]] = None):
+        self.comps = parse_module(text)
+        self.pod_block = pod_block
+        # (q_block, kv_len): instructions with [.., q_block, kv_len] trailing
+        # dims are attention-score buffers. The framework's Pallas
+        # flash_attention kernel keeps them in VMEM on TPU; with this set,
+        # their HBM traffic is tracked separately (attn_score_bytes).
+        self.fused_attn_shapes = fused_attn_shapes
+        self.attn_score_bytes = 0.0
+        self._memo: Dict[str, CostTotals] = {}
+        self._types: Dict[str, Dict[str, str]] = {}
+        m = re.search(r"^ENTRY %?([\w.\-]+)", text, re.M)
+        self.entry = m.group(1) if m else next(iter(self.comps), "")
+
+    def _is_score_shaped(self, type_str: str) -> bool:
+        if not self.fused_attn_shapes:
+            return False
+        qb, t = self.fused_attn_shapes
+        dims = _shape_dims(type_str)
+        return (len(dims) >= 2 and dims[-1] == t
+                and (dims[-2] == qb or (len(dims) >= 3 and dims[-3] == qb)))
+
+    def _type_table(self, comp: Computation) -> Dict[str, str]:
+        tbl = self._types.get(comp.name)
+        if tbl is None:
+            tbl = dict(comp.params)
+            for i in comp.instrs:
+                tbl[i.name] = i.type_str
+            self._types[comp.name] = tbl
+        return tbl
+
+    def _instr_table(self, comp: Computation) -> Dict[str, Instr]:
+        tbl = getattr(self, "_instrs_cache", None)
+        if tbl is None:
+            self._instrs_cache = tbl = {}
+        sub = tbl.get(comp.name)
+        if sub is None:
+            sub = {i.name: i for i in comp.instrs}
+            tbl[comp.name] = sub
+        return sub
+
+    def _resolve_type(self, comp: Computation, operand: str) -> str:
+        return self._type_table(comp).get(operand, "")
+
+    def _instr_of(self, comp: Computation, name: str) -> Optional[Instr]:
+        return self._instr_table(comp).get(name)
+
+    def _is_transparent_fusion(self, ins: Instr) -> bool:
+        """Fusion containing ONLY dtype/layout ops: a TPU compile fuses these
+        into their consumers (free); XLA:CPU materializes them because its
+        dots are f32-only."""
+        if ins.op not in ("fusion",):
+            return False
+        cm = _CALLS.search(ins.rest)
+        sub = self.comps.get(cm.group(1)) if cm else None
+        if sub is None:
+            return False
+        allowed = set(self._TRANSPARENT) | {"parameter"}
+        return all(i.op in allowed for i in sub.instrs)
+
+    _SLICEY = ("dynamic-slice", "slice", "parameter", "constant",
+               "get-tuple-element")
+
+    def _wire_dtype_ratio(self, comp: Computation, operand: str,
+                          result_type: str, depth=0) -> float:
+        """min-itemsize(producer elementwise chain) / itemsize(result)."""
+        mr = _SHAPE.search(result_type)
+        res_b = _DTYPE_BYTES.get(mr.group(1), 4) if mr else 4
+        ins = self._instr_of(comp, operand)
+        if ins is None or res_b == 0:
+            return 1.0
+        candidates = [ins.type_str]
+        if ins.op == "fusion":
+            cm = _CALLS.search(ins.rest)
+            sub = self.comps.get(cm.group(1)) if cm else None
+            if sub is not None:
+                allowed = set(self._TRANSPARENT) | set(self._SLICEY)
+                if all(i.op in allowed for i in sub.instrs):
+                    candidates += [i.type_str for i in sub.instrs
+                                   if i.op == "convert"]
+        elif ins.op in self._TRANSPARENT and depth < 4:
+            names = self._operands(ins)
+            if names:
+                return min(
+                    _DTYPE_BYTES.get(_SHAPE.search(ins.type_str).group(1), 4)
+                    / res_b,
+                    self._wire_dtype_ratio(comp, names[0], result_type,
+                                           depth + 1))
+        mins = []
+        for t in candidates:
+            m = _SHAPE.search(t)
+            if m:
+                mins.append(_DTYPE_BYTES.get(m.group(1), 4))
+        if not mins:
+            return 1.0
+        return min(min(mins) / res_b, 1.0)
+
+    def _source_type(self, comp: Computation, operand: str, depth=0) -> str:
+        """Type of an operand looking through converts/copies/transparent
+        fusions — the dtype a TPU compile would actually move."""
+        if depth > 6:
+            return self._resolve_type(comp, operand)
+        ins = self._instr_of(comp, operand)
+        if ins is None:
+            return self._resolve_type(comp, operand)
+        if ins.op in self._TRANSPARENT or self._is_transparent_fusion(ins):
+            names = self._operands(ins)
+            if names:
+                # pick the largest-itemsize-smallest... use first data operand
+                src = self._source_type(comp, names[0], depth + 1)
+                if src:
+                    # keep this op's SHAPE but the source's dtype (transposes
+                    # and bitcasts change layout/shape, not element count)
+                    src_bytes = _shape_bytes(src)
+                    own_bytes = _shape_bytes(ins.type_str)
+                    return src if src_bytes <= own_bytes else ins.type_str
+        return ins.type_str
+
+    def comp_cost(self, name: str) -> CostTotals:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = CostTotals()
+        if comp is None:
+            self._memo[name] = total
+            return total
+        self._memo[name] = total  # break cycles
+        for ins in comp.instrs:
+            op = ins.op
+            base_op = op.replace("-start", "")
+            # --- flops ---
+            if base_op in ("dot", "dot-general"):
+                res_dims = _shape_dims(ins.type_str)
+                n_res = 1
+                for d in res_dims:
+                    n_res *= d
+                lhs_c = _LHS_C.search(ins.rest)
+                contract = 1
+                names = _OPERAND.findall(ins.rest.split(")", 1)[0])
+                if lhs_c and names:
+                    lhs_type = self._resolve_type(comp, names[0])
+                    lhs_dims = _shape_dims(lhs_type)
+                    for idx in lhs_c.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contract *= lhs_dims[int(idx)]
+                total.flops += 2.0 * n_res * contract
+            elif base_op == "convolution":
+                # rough: 2 * result * (input feature window) — parse kernel
+                res = 1
+                for d in _shape_dims(ins.type_str):
+                    res *= d
+                names = _OPERAND.findall(ins.rest.split(")", 1)[0])
+                ker = 1
+                if len(names) >= 2:
+                    for d in _shape_dims(self._resolve_type(comp, names[1])):
+                        ker *= d
+                total.flops += 2.0 * res * ker / max(
+                    _shape_dims(ins.type_str)[-1] if _shape_dims(ins.type_str) else 1, 1)
+
+            # --- control flow / calls ---
+            if base_op == "fusion" or base_op == "call":
+                cm = _CALLS.search(ins.rest)
+                if cm:
+                    sub = self.comp_cost(cm.group(1))
+                    total.flops += sub.flops
+                    # fusion internals are on-chip; only count its collectives
+                    for c in sub.collectives:
+                        total.collectives.append(c)
+            elif base_op == "while":
+                trips = 1
+                tm = _TRIP.search(ins.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                bm = _WHILE_BODY.search(ins.rest)
+                cm = _WHILE_COND.search(ins.rest)
+                for sub_name in [x.group(1) for x in (bm, cm) if x]:
+                    sub = self.comp_cost(sub_name)
+                    total.flops += trips * sub.flops
+                    total.bytes += trips * sub.bytes
+                    total.attn_score_bytes += trips * sub.attn_score_bytes
+                    for c in sub.collectives:
+                        total.collectives.append(dataclasses.replace(
+                            c, count=c.count * trips))
+            elif base_op == "conditional":
+                bm = _BRANCHES.search(ins.rest)
+                if bm:
+                    subs = [self.comp_cost(n.strip().lstrip("%"))
+                            for n in bm.group(1).split(",")]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops + s.bytes)
+                        total.flops += best.flops
+                        total.bytes += best.bytes
+                        total.attn_score_bytes += best.attn_score_bytes
+                        total.collectives.extend(best.collectives)
+
+            # --- collectives ---
+            if base_op in COLLECTIVE_OPS and not op.endswith("-done"):
+                b, g, crosses = _parse_collective(ins, self.pod_block)
+                # TPU-faithful wire dtype: the narrowest dtype the operand's
+                # elementwise producer chain passes through (XLA:CPU's
+                # f32-only dots force f32->bf16->f32 roundtrips that a TPU
+                # compile never materializes — it gathers bf16)
+                names = self._operands(ins)
+                if names:
+                    b *= self._wire_dtype_ratio(comp, names[0], ins.type_str)
+                total.collectives.append(
+                    CollectiveRec(base_op, b, g, crosses, 1.0))
+
+            # --- bytes ---
+            if base_op in _SKIP_BYTES_OPS or base_op == "while":
+                continue
+            b = self._instr_bytes(comp, ins)
+            total.bytes += b
+            if self._is_score_shaped(ins.type_str):
+                total.attn_score_bytes += b
+        return total
+
+    def _operands(self, ins: Instr) -> List[str]:
+        return _OPERAND.findall(ins.rest.split(")", 1)[0])
+
+    def _instr_bytes(self, comp: Computation, ins: Instr) -> float:
+        """Utilization-aware bytes-accessed for one instruction (HBM side).
+
+        Mirrors XLA HloCostAnalysis semantics: dynamic-slice reads only the
+        slice, in-place dynamic-update-slice moves only the update, gathers
+        read result-sized data, and fusion parameters that are only sliced
+        inside the fusion contribute their sliced bytes, not the full array.
+        """
+        base_op = ins.op.replace("-start", "")
+        names = self._operands(ins)
+
+        if base_op == "dynamic-slice" or base_op == "slice":
+            return 2.0 * _shape_bytes(ins.type_str)
+        if base_op == "dynamic-update-slice":
+            upd = _shape_bytes(self._resolve_type(comp, names[1])) if len(names) > 1 else 0
+            return 2.0 * upd
+        if base_op == "gather":
+            idx = _shape_bytes(self._resolve_type(comp, names[1])) if len(names) > 1 else 0
+            return 2.0 * _shape_bytes(ins.type_str) + idx
+        if base_op == "scatter":
+            upd = _shape_bytes(self._resolve_type(comp, names[2])) if len(names) > 2 else 0
+            idx = _shape_bytes(self._resolve_type(comp, names[1])) if len(names) > 1 else 0
+            return 2.0 * upd + idx
+
+        if base_op in ("fusion", "call"):
+            if self._is_transparent_fusion(ins):
+                # dtype/layout-only: fused into the consumer on TPU — the
+                # consumer's operand accounting (source dtype) covers it
+                return 0.0
+            cm = _CALLS.search(ins.rest)
+            sub = self.comps.get(cm.group(1)) if cm else None
+            if sub is not None:
+                return self._fusion_bytes(sub, ins, names, caller=comp)
+
+        if base_op in self._TRANSPARENT:
+            return 0.0
+
+        rb = _shape_bytes(ins.type_str)
+        if base_op in ("dot", "dot-general"):
+            # TPU fuses the output convert into the matmul epilogue: count
+            # the result at the sink dtype when all uses narrow it
+            rb *= self._sink_ratio(comp, ins)
+        ob = sum(_shape_bytes(self._source_type(comp, nm)) for nm in names)
+        return rb + ob
+
+    def _use_table(self, comp: Computation) -> Dict[str, List[Instr]]:
+        cache = getattr(self, "_uses_cache", None)
+        if cache is None:
+            self._uses_cache = cache = {}
+        sub = cache.get(comp.name)
+        if sub is None:
+            sub = {}
+            for i in comp.instrs:
+                for nm in self._operands(i):
+                    sub.setdefault(nm, []).append(i)
+            cache[comp.name] = sub
+        return sub
+
+    def _sink_ratio(self, comp: Computation, ins: Instr) -> float:
+        uses = self._use_table(comp).get(ins.name, [])
+        if not uses:
+            return 1.0
+        m = _SHAPE.search(ins.type_str)
+        own = _DTYPE_BYTES.get(m.group(1), 4) if m else 4
+        worst = 0
+        for u in uses:
+            if u.op in self._TRANSPARENT or self._is_transparent_fusion(u):
+                mu = _SHAPE.search(u.type_str)
+                worst = max(worst, _DTYPE_BYTES.get(mu.group(1), 4) if mu else own)
+            else:
+                return 1.0
+        return min(worst / own, 1.0) if own else 1.0
+
+    _TRANSPARENT = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+    def _fusion_bytes(self, sub: Computation, ins: Instr, operand_names,
+                      caller: Optional[Computation] = None) -> float:
+        """Fusion bytes: per-parameter utilization + (possibly in-place) output.
+
+        Dtype/layout-only ops (convert/bitcast/copy/reshape/transpose) are
+        looked through: a TPU compile fuses them into their consumers, so a
+        parameter whose only transitive uses are slices contributes its
+        sliced bytes, not the full array (the CPU backend sometimes
+        materializes convert(whole-stash) -> dus -> convert chains that no
+        TPU compile would emit).
+        """
+        tbl = self._type_table(sub)
+        param_list = list(sub.params.keys())
+        uses: Dict[str, List[Instr]] = {}
+        for i in sub.instrs:
+            for nm in self._operands(i):
+                uses.setdefault(nm, []).append(i)
+
+        def effective_uses(name, depth=0):
+            out = []
+            for u in uses.get(name, []):
+                if u.op in self._TRANSPARENT and depth < 6:
+                    out.extend(effective_uses(u.name, depth + 1))
+                else:
+                    out.append(u)
+            return out
+
+        total = 0.0
+        for pi, p in enumerate(param_list):
+            full = _shape_bytes(sub.params[p])
+            if caller is not None and pi < len(operand_names):
+                # TPU-faithful: if the materialized operand came from a
+                # transparent (dtype/layout) chain, charge the source dtype
+                src = self._source_type(caller, operand_names[pi])
+                full = min(full, _shape_bytes(src)) if src else full
+            ulist = effective_uses(p)
+            if ulist and all(u.op in ("dynamic-slice", "slice",
+                                      "dynamic-update-slice") for u in ulist):
+                b = 0.0
+                for u in ulist:
+                    if u.op == "dynamic-update-slice":
+                        un = self._operands(u)
+                        b += _shape_bytes(tbl.get(un[1], "")) if len(un) > 1 else 0
+                    else:
+                        b += _shape_bytes(u.type_str)
+                total += min(b, full)
+            else:
+                total += full
+        # output: look through transparent root chain; in-place dus writes
+        # only the update
+        root = next((i for i in sub.instrs if i.is_root),
+                    sub.instrs[-1] if sub.instrs else None)
+        seen = 0
+        while root is not None and root.op in self._TRANSPARENT and seen < 6:
+            ops = self._operands(root)
+            root = next((i for i in sub.instrs if ops and i.name == ops[0]), None)
+            seen += 1
+        if root is not None and root.op == "dynamic-update-slice":
+            un = self._operands(root)
+            total += _shape_bytes(tbl.get(un[1], "")) if len(un) > 1 else 0
+        else:
+            total += _shape_bytes(ins.type_str)
+        return total
+
+    def totals(self) -> CostTotals:
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(text: str, pod_block: Optional[int] = None,
+                 fused_attn_shapes=None) -> Dict:
+    mc = ModuleCost(text, pod_block, fused_attn_shapes)
+    t = mc.totals()
+    ici = dcn = 0.0
+    per_op: Dict[str, float] = {}
+    counts: Dict[str, float] = {}
+    for c in t.collectives:
+        b = c.bytes_moved * c.count
+        per_op[c.op] = per_op.get(c.op, 0.0) + b
+        counts[c.op] = counts.get(c.op, 0.0) + c.count
+        if c.crosses_pod:
+            dcn += b
+        else:
+            ici += b
+    return {
+        "flops": t.flops,
+        "bytes_accessed": t.bytes,
+        "attn_score_bytes": t.attn_score_bytes,
+        "collectives": {"ici_bytes": ici, "dcn_bytes": dcn, **per_op},
+        "collective_counts": counts,
+        "n_collectives": sum(counts.values()),
+    }
+
+
+def f32_hoist_artifact_bytes(text: str) -> float:
+    """Estimate of XLA:CPU convert-hoisting artifacts in HBM.
+
+    XLA:CPU's f32-only dots make the compiler hoist whole-buffer bf16->f32
+    converts out of while loops: the loop then carries BOTH the bf16 buffer
+    and its f32 twin. A TPU compile (native bf16 MXU) never materializes the
+    f32 twin. Heuristic: sum f32 while-tuple entries (>=64 MB) whose dims
+    match a bf16 while-tuple entry elsewhere in the module.
+    """
+    import re as _re
+    tuples = _re.findall(r"while\(.*?\)", text)
+    # collect shapes from all while instruction result types
+    whiles = _re.findall(r"= (\([^)]*\)) while\(", text)
+    bf16_shapes = set()
+    f32_entries = []
+    for t in whiles:
+        for dt, dims in _SHAPE.findall(t):
+            if dt == "bf16":
+                bf16_shapes.add(dims)
+            elif dt == "f32":
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                if n * 4 >= 64 * 2**20:
+                    f32_entries.append((dims, n * 4))
+    seen = set()
+    total = 0.0
+    for dims, b in f32_entries:
+        if dims in bf16_shapes and (dims, b) not in seen:
+            seen.add((dims, b))
+            total += b
+    return total

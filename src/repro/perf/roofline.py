@@ -1,0 +1,77 @@
+"""Roofline model for TPU v5e: three terms from the compiled dry-run.
+
+    compute term    = HLO_FLOPs / (peak FLOP/s per chip)
+    memory term     = HLO_bytes / (HBM bandwidth per chip)
+    collective term = ici_bytes / ici_bw + dcn_bytes / dcn_bw
+
+All quantities are per-device (cost_analysis is post-SPMD). The dominant term
+is the bottleneck; MODEL_FLOPS / HLO_FLOPs measures how much compiled compute
+is "useful" (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (use 1 link conservatively)
+DCN_BW = 25e9                     # B/s inter-pod (slow axis; 2.5GbE analogue,
+                                  # scaled to datacenter DCN)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape, n_params_active: float) -> float:
+    """6·N·D for training; 2·N·D for inference (per forward token)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_params_active * tokens
+
+
+def count_params(params_sds) -> float:
+    import jax
+    return float(sum(
+        __import__("numpy").prod(p.shape) for p in jax.tree.leaves(params_sds)))
+
+
+def active_params(cfg, n_total: float) -> float:
+    """MoE: only top-k + shared experts are active per token."""
+    if not cfg.is_moe:
+        return n_total
+    routed_per_layer = 3 * cfg.d_model * cfg.moe_d_ff * cfg.num_experts
+    n_moe_layers = cfg.num_layers - cfg.first_k_dense
+    inactive = routed_per_layer * n_moe_layers * (
+        1 - cfg.experts_per_token / cfg.num_experts)
+    return n_total - inactive
+
+
+def compute_roofline(analysis: Dict, n_chips: int, model_fl: float) -> Roofline:
+    flops = analysis["flops"]
+    bytes_hbm = analysis["bytes_accessed"]
+    coll = analysis["collectives"]
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_hbm / HBM_BW
+    collective_s = (coll.get("ici_bytes", 0.0) / ICI_BW
+                    + coll.get("dcn_bytes", 0.0) / DCN_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    per_dev_model_flops = model_fl / n_chips
+    # training backward ~2x forward FLOPs is already in the 6x multiplier
+    useful = per_dev_model_flops / flops if flops else 0.0
+    return Roofline(compute_s, memory_s, collective_s, dominant,
+                    model_fl, flops, useful)

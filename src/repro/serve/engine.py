@@ -1,0 +1,112 @@
+"""Batched serving engine: continuous-batching-lite over prefill/decode.
+
+Requests queue up; the engine prefills them (padded into the fixed batch),
+then decodes in lock-step with per-slot stop handling. Energy per request is
+attributed via the telemetry tag bus (the paper's GPIO tagging, Sec. 4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mainboard import MainBoard
+from repro.core.probe import Probe
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, batch_size: int, max_seq: int,
+                 telemetry: bool = True):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+        self.board = MainBoard("serve-node") if telemetry else None
+        self.samples = []
+        if self.board:
+            self._power = 10.0
+            self.board.attach(Probe(lambda t: self._power))
+
+    def _pad_prompts(self, reqs: List[Request]):
+        s = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((self.batch_size, s), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, s - len(r.prompt):] = r.prompt   # left-pad
+        return jnp.asarray(toks), s
+
+    def serve(self, reqs: List[Request]) -> Dict:
+        """One batch generation pass; returns stats."""
+        assert len(reqs) <= self.batch_size
+        pad = [Request(-1, reqs[0].prompt, 0) for _ in
+               range(self.batch_size - len(reqs))]
+        batch_reqs = reqs + pad
+        tokens, s = self._pad_prompts(batch_reqs)
+        caches = self.model.init_cache(self.batch_size, self.max_seq)
+
+        t0 = time.perf_counter()
+        if self.board:
+            self.board.tags.raise_("prefill")
+        logits, caches = self._prefill(self.params, {"tokens": tokens}, caches)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+        if self.board:
+            self._power = 80.0
+            self.samples.extend(self.board.read_samples(t_prefill)[0])
+            self.board.tags.lower("prefill")
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # [B,1]
+        n_decoded = 0
+        t_dec = 0.0
+        for i in range(max_new):
+            for bi, r in enumerate(reqs):
+                if not r.done and r.max_new_tokens > len(r.output):
+                    tok = int(cur[bi, 0])
+                    r.output.append(tok)
+                    if r.eos_id is not None and tok == r.eos_id:
+                        r.done = True
+                elif not r.done:
+                    r.done = True
+            if all(r.done for r in reqs):
+                break
+            td0 = time.perf_counter()
+            if self.board:
+                self.board.tags.raise_("decode")
+            logits, caches = self._decode(self.params, cur,
+                                          jnp.int32(s + i), caches)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            jax.block_until_ready(cur)
+            dt = time.perf_counter() - td0
+            t_dec += dt
+            n_decoded += sum(1 for r in reqs if not r.done)
+            if self.board:
+                self._power = 40.0
+                self.samples.extend(self.board.read_samples(dt)[0])
+                self.board.tags.lower("decode")
+
+        stats = {
+            "prefill_s": t_prefill,
+            "decode_s": t_dec,
+            "tokens_decoded": n_decoded,
+            "decode_tok_per_s": n_decoded / t_dec if t_dec else 0.0,
+        }
+        if self.board:
+            stats["energy_j"] = MainBoard.energy_j(self.samples)
+            stats["energy_by_tag"] = MainBoard.energy_by_tag(self.samples)
+        return stats

@@ -1,0 +1,51 @@
+"""Serving steps: prefill (builds KV caches / recurrent state) and decode
+(one new token against a cache of ``seq_len``). Cache sharding comes from the
+model's ``cache_axes()`` logical axes; for batch=1 long-context decode the
+``kv_seq`` rule is overridden to sequence-shard the cache (context/SP)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import spec_for
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, caches):
+        logits, caches = model.prefill(params, batch, caches)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(model, greedy=True):
+    def decode_step(params, tokens, pos, caches):
+        logits, caches = model.decode_step(params, tokens, pos, caches)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, caches
+    return decode_step
+
+
+def serve_rules(shape):
+    """Sharding-rule overrides per shape cell.
+
+    batch=1 (long_500k): nothing to shard on batch -> sequence-shard KV
+    caches over ("pod","data") and keep TP on heads.
+    """
+    if shape.global_batch == 1:
+        return {"batch": None, "kv_seq": ("pod", "data")}
+    return {}
+
+
+def cache_specs(mesh, model, cache_sds, rules=None):
+    axes = model.cache_axes()
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    return jax.tree.map(
+        lambda a, c: spec_for(mesh, a, c.shape, rules),
+        axes, cache_sds, is_leaf=is_axes)
+
+
+def abstract_cache(model, batch_size, max_seq, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch_size, max_seq, dtype))

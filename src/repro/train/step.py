@@ -1,0 +1,139 @@
+"""Train step: bf16 compute, fp32 master params/optimizer, microbatched
+gradient accumulation (lax.scan), remat, and sharding-spec construction for
+pjit. The ``pod`` axis carries pure data parallelism — the slow-network axis,
+per DALEK's design; see ``repro.parallel.compress`` for the compressed
+variant of the cross-pod gradient reduction."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import softmax_xent
+from repro.parallel.sharding import spec_for, tree_specs
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import OptConfig, OptState
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    num_microbatches: int = 1
+    aux_loss_weight: float = 0.01
+    label_ignore: int = -1
+    # cast fp32 master params to bf16 ONCE per step (outside the microbatch
+    # accumulation loop): FSDP gathers move bf16 instead of f32, and XLA can
+    # hoist the gather out of the loop. Grads are computed w.r.t. the bf16
+    # tree and accumulated in f32 (standard bf16-param/f32-master scheme).
+    cast_params_once: bool = False
+    # >1: chunked cross-entropy (never materializes [B,S,V] logits);
+    # requires the model to expose .hidden()
+    vocab_chunks: int = 1
+
+
+def make_loss_fn(model, step_cfg: StepConfig):
+    if step_cfg.vocab_chunks > 1 and hasattr(model, "hidden"):
+        from repro.models.common import chunked_softmax_xent
+
+        def loss_fn(params, mb):
+            h, aux = model.hidden(params, mb)
+            labels = mb["labels"]
+            h = h[:, -labels.shape[1]:]
+            mask = (labels != step_cfg.label_ignore).astype(jnp.float32)
+            loss = chunked_softmax_xent(h, params, jnp.maximum(labels, 0),
+                                        mask, step_cfg.vocab_chunks)
+            return loss + step_cfg.aux_loss_weight * aux
+        return loss_fn
+
+    def loss_fn(params, mb):
+        logits, aux = model.forward(params, mb)
+        labels = mb["labels"]
+        logits = logits[:, -labels.shape[1]:]
+        mask = (labels != step_cfg.label_ignore).astype(jnp.float32)
+        loss = softmax_xent(logits, jnp.maximum(labels, 0), mask)
+        return loss + step_cfg.aux_loss_weight * aux
+    return loss_fn
+
+
+def make_train_step(model, opt_cfg: OptConfig, step_cfg: StepConfig):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = make_loss_fn(model, step_cfg)
+    n_micro = step_cfg.num_microbatches
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if step_cfg.cast_params_once:
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 and p.ndim > 1 else p, params)
+            # barrier pins the cast BEFORE the FSDP all-gather: the gather
+            # moves bf16, not the f32 the CPU backend's promoted dots want
+            params = jax.lax.optimization_barrier(params)
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]),
+                batch)
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            (grads, loss), _ = lax.scan(body, (gzero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+
+        new_params, new_opt, metrics = opt_mod.adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding-spec construction for pjit
+
+
+def batch_specs(mesh, batch_sds, rules=None):
+    """Shard the leading (batch) dim of every input over ("pod","data")."""
+    def spec(x):
+        return spec_for(mesh, ("batch",) + (None,) * (len(x.shape) - 1),
+                        x.shape, rules)
+    return jax.tree.map(spec, batch_sds)
+
+
+def param_specs(mesh, params_sds, axes, rules=None):
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    return jax.tree.map(
+        lambda a, p: spec_for(mesh, a, p.shape, rules),
+        axes, params_sds, is_leaf=is_axes)
+
+
+def state_specs(mesh, params_sds, axes, rules=None):
+    ps = param_specs(mesh, params_sds, axes, rules)
+    return TrainState(params=ps, opt=OptState(m=ps, v=ps, step=P()))
+
+
+def shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

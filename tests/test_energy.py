@@ -1,0 +1,110 @@
+"""Energy platform tests: probe rates/resolution, main-board limits, GPIO
+tags, DVFS/power-cap behaviour — each tied to a paper claim."""
+import numpy as np
+import pytest
+
+from repro.core import energy, hw
+from repro.core.mainboard import (BUS_MAX_SPS, MAX_PROBES, MainBoard,
+                                  PROBES_PER_BUS)
+from repro.core.probe import AVG_N, MILLIWATT, RAW_SPS, REPORT_SPS, Probe, ProbeConfig
+
+
+def test_probe_rates_match_paper():
+    # Sec. 4.2: 4000 SPS raw, averaged x4 -> 1000 reports/s
+    assert RAW_SPS == 4000 and AVG_N == 4 and REPORT_SPS == 1000
+
+
+def test_probe_sample_count_and_resolution():
+    p = Probe(lambda t: 55.1234567, ProbeConfig(noise_w=0.0))
+    samples = p.read(0.0, 0.25)
+    assert len(samples) == 250                       # 1000 SPS
+    for s in samples:
+        assert s.n_avg == AVG_N
+        # milliwatt quantization
+        assert abs(s.watts / MILLIWATT - round(s.watts / MILLIWATT)) < 1e-6
+        assert abs(s.watts - 55.123) < 0.001
+
+
+def test_probe_beats_grid5000():
+    """Paper Sec. 4.3: 1000 SPS @ 1 mW vs GRID'5000's ~50 SPS @ 0.1 W."""
+    assert REPORT_SPS / 50 >= 20
+    assert 0.1 / MILLIWATT >= 100
+
+
+def test_probe_usb_pd_clamp():
+    p = Probe(lambda t: 1000.0, ProbeConfig(noise_w=0.0))
+    s = p.read(0.0, 0.01)
+    assert all(abs(x.watts - 240.0) < 1e-6 for x in s)  # PD 3.1 limit
+
+
+def test_mainboard_bus_limits():
+    mb = MainBoard()
+    for i in range(MAX_PROBES):
+        mb.attach(Probe(lambda t: 10.0, ProbeConfig(probe_id=i)))
+    assert mb.n_probes == MAX_PROBES
+    with pytest.raises(RuntimeError):
+        mb.attach(Probe(lambda t: 10.0), bus=0)
+    assert mb.effective_sps(0) == BUS_MAX_SPS / PROBES_PER_BUS == REPORT_SPS
+
+
+def test_gpio_tag_energy_attribution():
+    mb = MainBoard()
+    mb.attach(Probe(lambda t: 100.0, ProbeConfig(noise_w=0.0)))
+    samples = []
+    with mb.tags.tag("region_a"):
+        samples += mb.read_samples(0.1)[0]
+    samples += mb.read_samples(0.1)[0]   # untagged
+    by_tag = MainBoard.energy_by_tag(samples)
+    total = MainBoard.energy_j(samples)
+    assert abs(by_tag["region_a"] - 10.0) < 0.2     # 100 W * 0.1 s
+    assert abs(total - 20.0) < 0.4
+    # 8-GPIO hardware limit
+    with pytest.raises(RuntimeError):
+        for i in range(9):
+            mb.tags.raise_(f"t{i}")
+
+
+def test_dvfs_cubic_power_monotone():
+    dev = hw.TPU_V5E
+    powers = [energy.power_w(dev, 1.0, energy.DvfsState(f))
+              for f in np.linspace(dev.f_min_ghz, dev.f_max_ghz, 5)]
+    assert all(a < b for a, b in zip(powers, powers[1:]))
+    assert abs(powers[-1] - dev.tdp_w) < 1e-6
+
+
+def test_power_cap_respected():
+    dev = hw.TPU_V5E
+    terms = {"compute": 1.0, "memory": 0.4, "collective": 0.2}
+    cap = 150.0
+    st = energy.cap_frequency(cap, terms, dev)
+    t = energy.step_time_s(terms, st, dev)
+    avg_w = energy.step_energy_j(terms, st, dev) / t
+    assert avg_w <= cap + 1e-6
+    # capping costs time
+    assert t >= energy.step_time_s(terms, None, dev)
+
+
+def test_pareto_energy_time_tradeoff():
+    terms = {"compute": 1.0, "memory": 0.3, "collective": 0.1}
+    front = energy.pareto_frontier(terms)
+    times = [p["step_s"] for p in front]
+    assert times[0] > times[-1]          # higher f -> faster
+
+
+def test_cluster_idle_power_paper_claim():
+    # Sec. 3.4: idle cluster (nodes off) ~50 W
+    assert 40.0 <= hw.cluster_idle_w("off") <= 60.0
+    # Tab. 2 totals
+    idle = hw.cluster_idle_w("idle")
+    assert abs(idle - hw.PAPER_TOTALS["idle_w"]) < 1.0
+
+
+def test_paper_suspend_total():
+    susp = sum(p.suspend_w for p in hw.DALEK_PARTITIONS.values())
+    assert abs(susp - hw.PAPER_TOTALS["suspend_w"]) < 1.0
+
+
+def test_paper_tdp_total():
+    tdp = (sum(p.tdp_w for p in hw.DALEK_PARTITIONS.values())
+           + hw.FRONTEND.tdp_w + hw.SWITCH_TDP_W + hw.N_RPI * hw.RPI_TDP_W)
+    assert abs(tdp - hw.PAPER_TOTALS["tdp_w"]) < 1.0

@@ -1,0 +1,152 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle across
+shape/dtype sweeps, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.stream import ops as stream_ops, ref as stream_ref
+from repro.kernels.stream import stream as stream_k
+from repro.kernels.dpa_matmul import ops as dpa_ops, ref as dpa_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+
+I = dict(interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# stream
+
+
+@pytest.mark.parametrize("rows,cols", [(64, 128), (256, 128), (128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stream_suite(rows, cols, dtype):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(rows, cols)), dtype)
+    b = jnp.asarray(rng.normal(size=(rows, cols)), dtype)
+    x = 1.7
+    np.testing.assert_allclose(stream_k.stream_copy(a, **I), stream_ref.copy(a))
+    np.testing.assert_allclose(
+        np.asarray(stream_k.stream_scale(a, x, **I), np.float32),
+        np.asarray(stream_ref.scale(a, x), np.float32), rtol=1e-2)
+    np.testing.assert_allclose(
+        np.asarray(stream_k.stream_add(a, b, **I), np.float32),
+        np.asarray(stream_ref.add(a, b), np.float32), rtol=1e-2)
+    np.testing.assert_allclose(
+        np.asarray(stream_k.stream_triad(a, b, x, **I), np.float32),
+        np.asarray(stream_ref.triad(a, b, x), np.float32),
+        rtol=2e-2, atol=1e-2)
+
+
+def test_stream_write_read():
+    out = stream_k.stream_write((64, 128), 3.5, **I)
+    np.testing.assert_allclose(out, stream_ref.write((64, 128), 3.5))
+    a = jnp.asarray(np.random.default_rng(1).normal(size=(64, 128)), jnp.float32)
+    np.testing.assert_allclose(stream_k.stream_read(a, block_rows=16, **I),
+                               stream_ref.read(a, block_rows=16), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dpa_matmul
+
+
+@pytest.mark.parametrize("variant,tol", [("fma_f32", 1e-5), ("dpa2", 2e-2),
+                                         ("dpa4", 0)])
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 256, 128, 128, 128, 128),
+    (256, 512, 128, 128, 128, 256),
+    (64, 128, 64, 64, 64, 128),
+])
+def test_dpa_matmul(variant, tol, m, k, n, bm, bn, bk):
+    rng = np.random.default_rng(2)
+    if variant == "dpa4":
+        a = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    else:
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    got = dpa_ops.matmul(a, b, variant=variant, interpret=True)
+    want = dpa_ref.matmul(a, b, variant)
+    if variant == "dpa4":
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol * k ** 0.5 + 1e-6, atol=tol * 4)
+
+
+def test_quantized_linear_close_to_fp():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(128, 64)) / np.sqrt(128), jnp.float32)
+    got = dpa_ops.quantized_linear(x, w, interpret=True)
+    want = x @ w
+    err = np.abs(np.asarray(got - want)) / (np.abs(np.asarray(want)) + 1e-2)
+    assert np.median(err) < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.sampled_from([64, 128]), k=st.sampled_from([128, 256]),
+       n=st.sampled_from([64, 128]), seed=st.integers(0, 2**16))
+def test_dpa4_exact_int_property(m, k, n, seed):
+    """int8 DPA accumulation is EXACT (no rounding) — paper's DPA4 claim."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    got = dpa_ops.matmul(a, b, variant="dpa4", interpret=True)
+    want = np.asarray(a, np.int32) @ np.asarray(b, np.int32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+@pytest.mark.parametrize("b,h,s,t,d", [
+    (1, 2, 128, 128, 64),
+    (2, 1, 256, 256, 128),
+    (1, 2, 128, 256, 64),   # cross-length (q shorter than kv)
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(b, h, s, t, d, causal, dtype):
+    if causal and s != t:
+        pytest.skip("causal with s<t needs offset semantics")
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, h, t, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, h, t, d)), dtype)
+    got = fa_ops.attention(q, k, v, causal=causal, interpret=True)
+    want = fa_ref.attention(q, k, v, causal=causal)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_window(window):
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    got = fa_ops.attention(q, k, v, causal=True, window=window,
+                           block_q=64, block_kv=64, interpret=True)
+    want = fa_ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       bq=st.sampled_from([32, 64, 128]),
+       bkv=st.sampled_from([32, 64, 128]))
+def test_flash_block_shape_invariance(seed, bq, bkv):
+    """Property: output independent of the VMEM block decomposition."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 1, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, 128, 64)), jnp.float32)
+    got = fa_ops.attention(q, k, v, causal=True, block_q=bq, block_kv=bkv,
+                           interpret=True)
+    want = fa_ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
