@@ -1,10 +1,12 @@
-"""Batched serving driver.
+"""Serving driver.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-27b --smoke \
-        --requests 6 --max-new 16
+        --requests 6 --max-new 16 --engine continuous --power-cap 150
 
-Serves synthetic prompts through the ServeEngine (prefill + lock-step decode)
-with per-request energy attribution from the telemetry tag bus.
+Serves synthetic prompts through either engine — ``static`` (padded batch,
+lock-step decode) or ``continuous`` (request queue, slot recycling,
+energy-aware admission) — with per-request energy attribution from the
+telemetry tag bus.
 """
 from __future__ import annotations
 
@@ -15,32 +17,53 @@ import numpy as np
 
 from repro import configs
 from repro.models import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-27b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=["static", "continuous"],
+                    default="continuous")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--power-cap", type=float, default=None,
+                    help="node power cap in W (continuous engine only)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     model = build_model(cfg, q_block=min(64, args.prompt_len))
     params, _ = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, batch_size=args.batch,
-                         max_seq=args.max_seq)
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     args.prompt_len).astype(np.int32),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
-    stats = engine.serve(reqs)
-    print(f"arch={cfg.name} reqs={args.requests} "
+
+    if args.engine == "static":
+        engine = ServeEngine(model, params, batch_size=args.batch,
+                             max_seq=args.max_seq)
+        stats = {}
+        for i in range(0, len(reqs), args.batch):
+            group = engine.serve(reqs[i:i + args.batch])
+            for k, v in group.items():
+                if isinstance(v, (int, float)):
+                    stats[k] = stats.get(k, 0.0) + v
+        stats["decode_tok_per_s"] = (stats["tokens_decoded"] /
+                                     stats["decode_s"] if stats.get("decode_s")
+                                     else 0.0)
+        stats["energy_by_tag"] = engine.tel.energy_stats()["energy_by_tag"]
+    else:
+        engine = ContinuousEngine(model, params, batch_size=args.batch,
+                                  max_seq=args.max_seq,
+                                  power_cap_w=args.power_cap)
+        stats = engine.serve(reqs)
+
+    print(f"arch={cfg.name} engine={args.engine} reqs={args.requests} "
           f"prefill={stats['prefill_s']*1e3:.0f}ms "
           f"decode={stats['decode_s']*1e3:.0f}ms "
           f"({stats['decode_tok_per_s']:.1f} tok/s)")
@@ -48,7 +71,10 @@ def main(argv=None):
         print("energy by tag (J):",
               {k: round(v, 2) for k, v in stats["energy_by_tag"].items()})
     for r in reqs:
-        print(f"  req {r.req_id}: {len(r.output)} tokens")
+        j_tok = r.energy_j / max(len(r.output), 1)
+        print(f"  req {r.req_id}: {len(r.output)} tokens "
+              f"[{r.finish_reason or 'ok'}] {r.energy_j:.2f} J "
+              f"({j_tok:.3f} J/token)")
     return stats
 
 

@@ -171,18 +171,29 @@ def _repeat_kv(k, n_q_heads):
 
 
 def _mask(q_pos, k_pos, *, causal, window, is_global):
-    """q_pos: [S], k_pos: [T] -> bool [S, T]. window/is_global may be traced."""
-    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    """Attention mask. window/is_global may be traced.
+
+    Unbatched: q_pos [S], k_pos [T] -> bool [S, T].
+    Batched (continuous batching: per-slot positions): q_pos [B, S] and/or
+    k_pos [B, T] -> bool [B, S, T].
+    """
+    if q_pos.ndim > 1 or k_pos.ndim > 1:
+        qp = (q_pos if q_pos.ndim > 1 else q_pos[None])[:, :, None]
+        kp = (k_pos if k_pos.ndim > 1 else k_pos[None])[:, None, :]
+    else:
+        qp, kp = q_pos[:, None], k_pos[None, :]
+    shape = jnp.broadcast_shapes(qp.shape, kp.shape)
+    m = jnp.ones(shape, bool)
     if causal:
-        m = m & (k_pos[None, :] <= q_pos[:, None])
+        m = m & (kp <= qp)
     if window is not None:
-        in_win = (q_pos[:, None] - k_pos[None, :]) < window
+        in_win = (qp - kp) < window
         m = m & jnp.where(is_global, True, in_win)
     return m
 
 
 def attention_scores(q, k, v, mask, scores_f32=True):
-    """Naive full attention. q:[B,S,H,Dh] k,v:[B,T,H,Dh] mask:[S,T].
+    """Naive full attention. q:[B,S,H,Dh] k,v:[B,T,H,Dh] mask:[S,T] or [B,S,T].
 
     scores_f32=False keeps the score/probability buffers in bf16 (flash-
     style numerics: max-subtracted exp in bf16, f32 denominator) — halves
@@ -190,13 +201,14 @@ def attention_scores(q, k, v, mask, scores_f32=True):
     keeps everything in VMEM regardless.
     """
     dh = q.shape[-1]
+    mb = mask[None, None] if mask.ndim == 2 else mask[:, None]  # -> [B|1,1,S,T]
     if scores_f32:
         s = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / np.sqrt(dh)
-        s = jnp.where(mask[None, None, :, :], s, -1e30)
+        s = jnp.where(mb, s, -1e30)
         p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
         return jnp.einsum("bhst,bthd->bshd", p, v)
     s = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.asarray(np.sqrt(dh), q.dtype)
-    s = jnp.where(mask[None, None, :, :], s, jnp.asarray(-jnp.inf, s.dtype))
+    s = jnp.where(mb, s, jnp.asarray(-jnp.inf, s.dtype))
     m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
     m = jnp.maximum(m, jnp.asarray(-1e30, s.dtype))  # all-masked rows
     p = jnp.exp(s - m)                                # bf16, in [0,1]
@@ -252,6 +264,9 @@ def attention(x, p, cfg: ModelConfig, shd: Sharder, *, positions,
     when given, behaves as a decode/prefill step writing at ``cache_pos``
     (or ``cache_slot`` when the cache is a ring buffer — then pass explicit
     ``k_positions``/``k_valid`` for the slot->token-position mapping).
+    ``cache_pos``/``cache_slot`` may be a [B] vector during single-token
+    decode (continuous batching: every batch row sits at its own position;
+    pass ``positions`` as [B, 1] to match).
     return_kv: also return the freshly projected (k, v) (used to build
     window ring buffers after a cache-less prefill).
     """
@@ -265,14 +280,23 @@ def attention(x, p, cfg: ModelConfig, shd: Sharder, *, positions,
     if kv_cache is not None:
         ck, cv = kv_cache
         write_at = cache_pos if cache_slot is None else cache_slot
-        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, write_at, 0, 0))
-        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, write_at, 0, 0))
+        if jnp.ndim(write_at) == 0:
+            ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, write_at, 0, 0))
+            cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, write_at, 0, 0))
+        else:
+            assert s == 1, "per-row cache positions require single-token decode"
+            bidx = jnp.arange(b)
+            ck = ck.at[bidx, write_at].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[bidx, write_at].set(v[:, 0].astype(cv.dtype))
         new_cache = (ck, cv)
         k, v = ck, cv
         t_max = ck.shape[1]
         if k_positions is None:
             k_positions = jnp.arange(t_max)
-            valid = k_positions < (cache_pos + s)
+            if jnp.ndim(cache_pos) == 0:
+                valid = k_positions < (cache_pos + s)
+            else:
+                valid = k_positions[None, :] < (cache_pos[:, None] + s)
         else:
             valid = k_valid
     else:
@@ -292,13 +316,13 @@ def attention(x, p, cfg: ModelConfig, shd: Sharder, *, positions,
         m = _mask(positions, k_positions, causal=causal, window=window,
                   is_global=is_global)
         if valid is not None:
-            m = m & valid[None, :]
+            m = m & (valid[None, :] if valid.ndim == 1 else valid[:, None, :])
         o = attention_scores(qg, k, v, m, scores_f32)
     elif impl == "naive":
         m = _mask(positions, k_positions, causal=causal, window=window,
                   is_global=is_global)
         if valid is not None:
-            m = m & valid[None, :]
+            m = m & (valid[None, :] if valid.ndim == 1 else valid[:, None, :])
         o = attention_scores(qg, k, v, m, scores_f32)
     else:
         if valid is not None:
@@ -319,6 +343,37 @@ def attention(x, p, cfg: ModelConfig, shd: Sharder, *, positions,
     if return_kv:
         return out, fresh_kv
     return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# KV-cache slot management (continuous batching)
+
+
+def reset_cache_slot(caches, slot, batch_axis=1):
+    """Zero one batch row across a KV-cache pytree (slot recycling).
+
+    Caches are stacked [L, B, T, kvh, dh] arrays (or dicts of them for
+    local:global window caches); ``batch_axis`` selects the B axis. ``slot``
+    may be a traced scalar, so the helper is jit-friendly.
+    """
+    def _zero(c):
+        row = lax.dynamic_slice_in_dim(c, slot, 1, batch_axis)
+        return lax.dynamic_update_slice_in_dim(
+            c, jnp.zeros_like(row), slot, batch_axis)
+    return jax.tree.map(_zero, caches)
+
+
+def gather_cache_slot(caches, slot, batch_axis=1):
+    """Extract one batch row of a cache pytree as a batch-1 cache."""
+    return jax.tree.map(
+        lambda c: lax.dynamic_slice_in_dim(c, slot, 1, batch_axis), caches)
+
+
+def scatter_cache_slot(caches, update, slot, batch_axis=1):
+    """Write a batch-1 cache pytree back into one batch row."""
+    return jax.tree.map(
+        lambda c, u: lax.dynamic_update_slice_in_dim(
+            c, u.astype(c.dtype), slot, batch_axis), caches, update)
 
 
 # ---------------------------------------------------------------------------

@@ -223,7 +223,11 @@ class DecoderLM:
             if s == 1:
                 slot = cache_pos % w
                 j = jnp.arange(w)
-                k_pos = cache_pos - ((cache_pos - j) % w)
+                if jnp.ndim(cache_pos) == 0:
+                    k_pos = cache_pos - ((cache_pos - j) % w)
+                else:                                    # per-row positions
+                    cp = cache_pos[:, None]
+                    k_pos = cp - ((cp - j[None, :]) % w)  # [B, w]
                 ck = lax.dynamic_index_in_dim(lk, lil, 0, keepdims=False)
                 cv = lax.dynamic_index_in_dim(lv, lil, 0, keepdims=False)
                 h, nc = common.attention(
@@ -329,11 +333,16 @@ class DecoderLM:
         return logits, caches
 
     def decode_step(self, params, token, pos, caches):
-        """One decode step. token: [B,1] int32; pos: scalar int32."""
+        """One decode step. token: [B,1] int32; pos: scalar int32 or [B]
+        int32 (continuous batching: each batch row decodes at its own
+        position; rows attend only to their own cache prefix)."""
         dtype = jnp.dtype(self.cfg.dtype)
         x = common.embed(token, params, dtype)
         x = self.shd(x, "batch", "seq", "act_embed")
-        positions = jnp.array([0], jnp.int32) + pos
+        if jnp.ndim(pos) == 0:
+            positions = jnp.array([0], jnp.int32) + pos
+        else:
+            positions = pos.astype(jnp.int32)[:, None]   # [B, 1]
         x, caches, _ = self._run_stack(x, params, positions=positions,
                                        caches=caches, cache_pos=pos)
         logits = common.unembed(x, params, self.shd)

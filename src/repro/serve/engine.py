@@ -1,12 +1,21 @@
-"""Batched serving engine: continuous-batching-lite over prefill/decode.
+"""Serving engines with energy-attributed telemetry.
 
-Requests queue up; the engine prefills them (padded into the fixed batch),
-then decodes in lock-step with per-slot stop handling. Energy per request is
-attributed via the telemetry tag bus (the paper's GPIO tagging, Sec. 4.1).
+Two engines share one telemetry pipeline (MainBoard + INA228 probe + GPIO
+tag bus, paper Sec. 4.1), with power traces *derived* from the roofline/DVFS
+energy model (``core.energy.ServePowerModel``) — no hardcoded watt constants:
+
+``ServeEngine``      static-batch baseline: one padded prefill, lock-step
+                     decode until every request in the batch finishes.
+``ContinuousEngine`` true continuous batching: admission-controlled request
+                     queue, per-slot KV-cache state, fused jitted decode with
+                     per-slot positions (one host sync per step), slot
+                     recycling so new requests join mid-decode, per-request
+                     J/token attribution via GPIO slot tags, and an
+                     energy-aware admission policy (DVFS power capping +
+                     TTL shedding from measured throughput).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional
 
@@ -14,34 +23,130 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.energy import ServePowerModel
+from repro.core.hw import DeviceSpec, TPU_V5E
 from repro.core.mainboard import MainBoard
-from repro.core.probe import Probe
+from repro.core.probe import REPORT_SPS, Probe
+from repro.core.scheduler import ThroughputStats
+from repro.core.tags import N_GPIO
+from repro.models.common import reset_cache_slot
+from repro.serve.queue import AdmissionController, Request, RequestQueue
+from repro.serve.slots import SlotManager
+from repro.serve.step import make_decode_step, make_slot_prefill
+
+__all__ = ["Request", "ServeEngine", "ContinuousEngine", "EngineTelemetry"]
 
 
-@dataclasses.dataclass
-class Request:
-    req_id: int
-    prompt: np.ndarray            # [S] int32
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+def _count_params(params) -> float:
+    return float(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params)))
+
+
+def _cache_bytes(model, batch_size, max_seq) -> float:
+    """KV-cache footprint (bytes) without allocating it."""
+    sds = jax.eval_shape(lambda: model.init_cache(batch_size, max_seq))
+    return float(sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                     for l in jax.tree.leaves(sds)))
+
+
+class EngineTelemetry:
+    """Board + probe + tag-bus wiring shared by both engines.
+
+    Phase tags ("prefill"/"decode") use two GPIO channels; the remaining
+    channels carry per-slot tags so board energy can be attributed to the
+    request owning each slot. With more slots than spare channels, slots
+    share tags round-robin and a shared tag's energy splits equally among
+    its active slots (board power is one stream; concurrent attribution
+    needs a split policy — we use equal shares).
+    """
+
+    N_PHASE_TAGS = 2
+
+    def __init__(self, power_model: ServePowerModel, batch_size: int,
+                 node: str = "serve-node"):
+        self.pm = power_model
+        self.board = MainBoard(node)
+        self.board.attach(Probe(self._power))
+        self.samples = []
+        self.n_slot_tags = max(1, min(batch_size, N_GPIO - self.N_PHASE_TAGS))
+        self._trace = None
+        self._t0 = 0.0
+        self._cursor = 0.0
+
+    def _power(self, t: float) -> float:
+        if self._trace is None:
+            return self.pm.idle_power_w()
+        return self._trace(t - self._t0)
+
+    def slot_tag(self, slot_index: int) -> str:
+        return f"s{slot_index % self.n_slot_tags}"
+
+    def record(self, phase: str, wall_s: float, n_tokens: int,
+               slot_to_req: Dict[int, Request]):
+        """Sample ``wall_s`` of board power under ``phase`` + slot tags and
+        attribute each sample's energy to the requests owning the slots.
+
+        The probe emits ``round(duration * REPORT_SPS)`` samples per read;
+        windows are kept on the global 1-kHz sample grid so sub-millisecond
+        steps carry their fraction into the next window instead of silently
+        dropping energy (the residual is bounded by one sample period)."""
+        if wall_s <= 0:
+            return []
+        self._trace = self.pm.trace(n_tokens, wall_s)
+        self._t0 = self._cursor
+        end = self._cursor + wall_s
+        read_s = (round(end * REPORT_SPS)
+                  - round(self._cursor * REPORT_SPS)) / REPORT_SPS
+        tag_groups: Dict[str, List[Request]] = {}
+        for idx, req in slot_to_req.items():
+            tag_groups.setdefault(self.slot_tag(idx), []).append(req)
+        tags = [phase] + sorted(tag_groups)
+        for tg in tags:
+            self.board.tags.raise_(tg)
+        out = self.board.read_samples(read_s) if read_s > 0 else {}
+        for tg in reversed(tags):
+            self.board.tags.lower(tg)
+        self.board.advance(wall_s - read_s)   # keep board clock on wall time
+        self._cursor = end
+        self._trace = None
+        samples = [s for stream in out.values() for s in stream]
+        self.samples.extend(samples)
+        dt = 1.0 / REPORT_SPS
+        for s in samples:
+            sharers = [r for tg in s.tags for r in tag_groups.get(tg, ())]
+            if sharers:
+                share = s.watts * dt / len(sharers)
+                for r in sharers:
+                    r.energy_j += share
+        return samples
+
+    def energy_stats(self) -> Dict:
+        return {
+            "energy_j": MainBoard.energy_j(self.samples),
+            "energy_by_tag": MainBoard.energy_by_tag(self.samples),
+        }
+
+
+# ---------------------------------------------------------------------------
+# static-batch baseline
 
 
 class ServeEngine:
+    """Static batching: requests are padded into one fixed batch, prefilled
+    together, and decoded in lock-step until the whole batch finishes. The
+    baseline the continuous engine is benchmarked against."""
+
     def __init__(self, model, params, *, batch_size: int, max_seq: int,
-                 telemetry: bool = True):
+                 telemetry: bool = True, dev: DeviceSpec = TPU_V5E):
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.max_seq = max_seq
         self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
-        self.board = MainBoard("serve-node") if telemetry else None
-        self.samples = []
-        if self.board:
-            self._power = 10.0
-            self.board.attach(Probe(lambda t: self._power))
+        self._decode = jax.jit(make_decode_step(model))
+        self.pm = ServePowerModel(
+            _count_params(params), dev=dev,
+            cache_bytes=_cache_bytes(model, batch_size, max_seq))
+        self.tel = EngineTelemetry(self.pm, batch_size) if telemetry else None
 
     def _pad_prompts(self, reqs: List[Request]):
         s = max(len(r.prompt) for r in reqs)
@@ -52,61 +157,256 @@ class ServeEngine:
 
     def serve(self, reqs: List[Request]) -> Dict:
         """One batch generation pass; returns stats."""
-        assert len(reqs) <= self.batch_size
-        pad = [Request(-1, reqs[0].prompt, 0) for _ in
-               range(self.batch_size - len(reqs))]
-        batch_reqs = reqs + pad
-        tokens, s = self._pad_prompts(batch_reqs)
+        assert reqs and len(reqs) <= self.batch_size
+        pad = [Request(-1, np.zeros(1, np.int32), 0)
+               for _ in range(self.batch_size - len(reqs))]
+        tokens, s = self._pad_prompts(reqs + pad)
         caches = self.model.init_cache(self.batch_size, self.max_seq)
+        n0 = len(self.tel.samples) if self.tel else 0
 
         t0 = time.perf_counter()
-        if self.board:
-            self.board.tags.raise_("prefill")
         logits, caches = self._prefill(self.params, {"tokens": tokens}, caches)
-        jax.block_until_ready(logits)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cur_host = np.asarray(cur)
         t_prefill = time.perf_counter() - t0
-        if self.board:
-            self._power = 80.0
-            self.samples.extend(self.board.read_samples(t_prefill)[0])
-            self.board.tags.lower("prefill")
+        if self.tel:
+            self.tel.record("prefill", t_prefill, len(reqs) * s,
+                            {i: r for i, r in enumerate(reqs)})
 
-        max_new = max(r.max_new_tokens for r in reqs)
-        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # [B,1]
+        for r in reqs:
+            if r.max_new_tokens <= 0:
+                r.done = True
+                r.finish_reason = "length"
+
         n_decoded = 0
         t_dec = 0.0
-        for i in range(max_new):
+        step = 0
+        while not all(r.done for r in reqs):
+            # emit the token sampled from the last logits (prefill or decode)
             for bi, r in enumerate(reqs):
-                if not r.done and r.max_new_tokens > len(r.output):
-                    tok = int(cur[bi, 0])
-                    r.output.append(tok)
-                    if r.eos_id is not None and tok == r.eos_id:
-                        r.done = True
-                elif not r.done:
+                if r.done:
+                    continue
+                tok = int(cur_host[bi, 0])
+                r.output.append(tok)
+                n_decoded += 1
+                if r.eos_id is not None and tok == r.eos_id:
                     r.done = True
+                    r.finish_reason = "eos"
+                elif r.n_generated >= r.max_new_tokens:
+                    r.done = True
+                    r.finish_reason = "length"
             if all(r.done for r in reqs):
-                break
+                break           # nothing left: the last logits are not wasted
+            active = {bi: r for bi, r in enumerate(reqs) if not r.done}
             td0 = time.perf_counter()
-            if self.board:
-                self.board.tags.raise_("decode")
-            logits, caches = self._decode(self.params, cur,
-                                          jnp.int32(s + i), caches)
-            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            jax.block_until_ready(cur)
+            cur, _, caches = self._decode(self.params, cur,
+                                          jnp.int32(s + step), caches)
+            cur_host = np.asarray(cur)      # one host sync per step
             dt = time.perf_counter() - td0
             t_dec += dt
-            n_decoded += sum(1 for r in reqs if not r.done)
-            if self.board:
-                self._power = 40.0
-                self.samples.extend(self.board.read_samples(dt)[0])
-                self.board.tags.lower("decode")
+            step += 1
+            if self.tel:
+                self.tel.record("decode", dt, len(active), active)
 
         stats = {
             "prefill_s": t_prefill,
             "decode_s": t_dec,
+            "decode_steps": step,
             "tokens_decoded": n_decoded,
             "decode_tok_per_s": n_decoded / t_dec if t_dec else 0.0,
         }
-        if self.board:
-            stats["energy_j"] = MainBoard.energy_j(self.samples)
-            stats["energy_by_tag"] = MainBoard.energy_by_tag(self.samples)
+        if self.tel:
+            win = self.tel.samples[n0:]     # this call's sample window
+            stats["energy_j"] = MainBoard.energy_j(win)
+            stats["energy_by_tag"] = MainBoard.energy_by_tag(win)
         return stats
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+
+
+class ContinuousEngine:
+    """Continuous batching over one shared KV cache.
+
+    Requests queue up (``submit``) and ``run`` drains them: free slots are
+    filled via single-slot prefills (other slots keep their in-flight
+    state), every decode step advances *all* active slots with one fused
+    jitted call (per-slot positions, sampling inside jit, one [B,1] host
+    fetch), and a slot is recycled the moment its request hits EOS or its
+    token budget — so late requests join mid-decode instead of waiting for
+    the batch to drain.
+    """
+
+    def __init__(self, model, params, *, batch_size: int, max_seq: int,
+                 telemetry: bool = True, dev: DeviceSpec = TPU_V5E,
+                 power_cap_w: Optional[float] = None, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self._decode = jax.jit(make_decode_step(model, greedy))
+        self._prefill_slot = jax.jit(make_slot_prefill(model))
+        self._reset_slot = jax.jit(reset_cache_slot)
+        self.pm = ServePowerModel(
+            _count_params(params), dev=dev,
+            cache_bytes=_cache_bytes(model, batch_size, max_seq))
+        self.stats = ThroughputStats()
+        self.admission = AdmissionController(self.pm, power_cap_w, self.stats)
+        self.queue = RequestQueue()
+        self.slots = SlotManager(batch_size, max_seq)
+        self.tel = EngineTelemetry(self.pm, batch_size) if telemetry else None
+        self.caches = None
+        self.dvfs = self.admission.apply_dvfs(batch_size)
+        self.finished: List[Request] = []
+        self._n_emitted = 0
+        self._decode_s = 0.0
+        self._prefill_s = 0.0
+        self._decode_steps = 0
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, req: Request):
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.req_id}: prompt({len(req.prompt)}) + "
+                f"max_new({req.max_new_tokens}) exceeds max_seq={self.max_seq}")
+        self.queue.push(req)
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    def _finish(self, slot, reason: str):
+        req = slot.req
+        req.done = True
+        req.finish_reason = reason
+        self.finished.append(req)
+        # recycle: zero the slot's cache rows so the next occupant starts clean
+        self.caches = self._reset_slot(self.caches, jnp.int32(slot.index))
+        self.slots.release(slot)
+
+    def _emit(self, slot, tok: int):
+        req = slot.req
+        req.output.append(tok)
+        self._n_emitted += 1
+        if req.eos_id is not None and tok == req.eos_id:
+            self._finish(slot, "eos")
+        elif req.n_generated >= req.max_new_tokens:
+            self._finish(slot, "length")
+
+    def _shed_stale(self):
+        """TTL shedding: a queued request's predicted wait is the remaining
+        token budget ahead of it (active slots + queue positions in front)
+        cleared at the measured decode rate."""
+        if not self.queue:
+            return
+        ahead = sum(s.req.max_new_tokens - s.req.n_generated
+                    for s in self.slots.active_slots())
+        for req in self.queue.snapshot():
+            if self.admission.should_shed(req, ahead):
+                self.queue.remove(req)
+                self.queue.shed(req)
+            else:
+                ahead += req.max_new_tokens
+
+    def _admit(self):
+        """Fill free slots from the queue, subject to the admission policy."""
+        self._shed_stale()
+        while self.queue and self.slots.free_slots():
+            if self.admission.max_slots(self.batch_size) == 0:
+                while self.queue:        # cap below even 1-slot power: shed
+                    self.queue.shed(self.queue.pop(), "shed-cap")
+                break
+            if not self.admission.admit(self.slots.n_active, self.batch_size):
+                break                     # defer under the power cap
+            req = self.queue.pop()
+            if req.max_new_tokens <= 0:
+                req.done = True
+                req.finish_reason = "length"
+                self.finished.append(req)
+                continue
+            self._prefill_into(self.slots.free_slots()[0], req)
+
+    def _prefill_into(self, slot, req: Request):
+        tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        t0 = time.perf_counter()
+        next_tok, _, self.caches = self._prefill_slot(
+            self.params, tokens, jnp.int32(slot.index), self.caches)
+        first = int(np.asarray(next_tok)[0, 0])
+        dt = time.perf_counter() - t0
+        req.prefill_s = dt
+        self._prefill_s += dt
+        self.stats.observe("prefill", len(req.prompt), dt)
+        if self.tel:
+            self.tel.record("prefill", dt, len(req.prompt), {slot.index: req})
+        self.slots.assign(slot, req, first)
+        self._emit(slot, first)   # prefill samples the first token
+
+    def _decode_once(self):
+        active = self.slots.active_slots()
+        tokens = jnp.asarray(self.slots.batch_tokens())
+        pos = jnp.asarray(self.slots.batch_positions())
+        t0 = time.perf_counter()
+        next_tok, _, self.caches = self._decode(self.params, tokens, pos,
+                                                self.caches)
+        toks = np.asarray(next_tok)          # one host sync per step
+        dt = time.perf_counter() - t0
+        self._decode_s += dt
+        self._decode_steps += 1
+        self.stats.observe("decode", len(active), dt)
+        if self.tel:
+            self.tel.record("decode", dt, len(active),
+                            {s.index: s.req for s in active})
+        for s in active:
+            s.req.decode_steps += 1
+            tok = int(toks[s.index, 0])
+            self.slots.advance(s, tok)
+            self._emit(s, tok)
+
+    # -- driver --------------------------------------------------------------
+
+    def run(self) -> Dict:
+        """Drain the queue; returns aggregate + per-request stats."""
+        if self.caches is None:
+            self.caches = self.model.init_cache(self.batch_size, self.max_seq)
+        while True:
+            self._admit()
+            if self.slots.n_active == 0:
+                break
+            self._decode_once()
+        stats = {
+            "completed": len(self.finished),
+            "shed": self.queue.n_shed,
+            "tokens_decoded": self._n_emitted,
+            "prefill_s": self._prefill_s,
+            "decode_s": self._decode_s,
+            "decode_steps": self._decode_steps,
+            "decode_tok_per_s": (self._n_emitted / self._decode_s
+                                 if self._decode_s else 0.0),
+            "prefills": self.slots.n_assigned,
+            "slots_recycled": self.slots.n_released,
+            "peak_active": self.slots.peak_active,
+            "dvfs_f_ghz": self.dvfs.f_ghz if self.dvfs else None,
+        }
+        if self.tel:
+            stats.update(self.tel.energy_stats())
+        return stats
+
+    def serve(self, reqs: List[Request]) -> Dict:
+        """Convenience: submit all and drain."""
+        for r in reqs:
+            self.submit(r)
+        return self.run()
+
+    def reset_metrics(self):
+        """Clear counters, queue state, and samples (benchmark warmup);
+        jit caches and the KV buffer survive — freed slots are always
+        re-prefilled before reuse, so stale KV is never read."""
+        self.finished = []
+        self._n_emitted = 0
+        self._decode_s = 0.0
+        self._prefill_s = 0.0
+        self._decode_steps = 0
+        self.queue = RequestQueue()
+        self.slots = SlotManager(self.batch_size, self.max_seq)
+        if self.tel:
+            self.tel.samples = []

@@ -1,0 +1,142 @@
+"""Request queue + energy-aware admission control for the serving engine.
+
+Requests enter a FIFO queue; the admission controller decides, per engine
+iteration, how many may occupy decode slots. Under a node power cap it
+consults the DVFS model (``core.energy.cap_frequency``) for the highest
+sustainable frequency and limits concurrency so the modeled average power
+stays under the cap; requests whose predicted queue wait (from measured
+throughput, ``core.scheduler.ThroughputStats``) exceeds their TTL are shed.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional
+
+import numpy as np
+
+from repro.core.energy import DvfsState, ServePowerModel, cap_frequency
+from repro.core.hw import DeviceSpec
+from repro.core.scheduler import ThroughputStats
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``output`` accumulates sampled token ids;
+    ``energy_j`` accumulates this request's share of board energy from the
+    tag-bus attribution (paper Sec. 4.1)."""
+
+    req_id: int
+    prompt: np.ndarray              # [S] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    ttl_s: Optional[float] = None   # shed if predicted wait exceeds this
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    finish_reason: str = ""         # "length" | "eos" | "shed"
+    energy_j: float = 0.0
+    prefill_s: float = 0.0
+    decode_steps: int = 0
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.output)
+
+
+class RequestQueue:
+    """FIFO admission queue with shed support."""
+
+    def __init__(self):
+        self._q: Deque[Request] = collections.deque()
+        self.n_shed = 0
+
+    def push(self, req: Request):
+        self._q.append(req)
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+    def peek(self) -> Request:
+        return self._q[0]
+
+    def shed(self, req: Request, reason: str = "shed"):
+        req.done = True
+        req.finish_reason = reason
+        self.n_shed += 1
+
+    def queued_tokens(self) -> int:
+        """Token budget waiting in the queue (admission wait estimate)."""
+        return sum(r.max_new_tokens for r in self._q)
+
+    def snapshot(self) -> List[Request]:
+        """Queue contents in FIFO order (for shed walks)."""
+        return list(self._q)
+
+    def remove(self, req: Request):
+        self._q.remove(req)
+
+    def __len__(self):
+        return len(self._q)
+
+    def __bool__(self):
+        return bool(self._q)
+
+
+class AdmissionController:
+    """Energy-aware admission: concurrency under a power cap + TTL shedding.
+
+    With no cap every free slot is filled (work-conserving). With a cap:
+
+    1. ``cap_frequency`` picks the highest DVFS state whose modeled step
+       power at full batch fits the cap (frequency is set per-node, not
+       per-slot).
+    2. At that frequency, concurrency is limited to the largest ``n`` whose
+       duty-cycle-average power (``ServePowerModel.avg_power_w``) fits the
+       cap — admitting more requests raises utilization and therefore power.
+    3. Requests whose predicted wait (queued tokens / measured decode rate)
+       exceeds their TTL are shed instead of queued indefinitely.
+    """
+
+    def __init__(self, power_model: Optional[ServePowerModel] = None,
+                 power_cap_w: Optional[float] = None,
+                 stats: Optional[ThroughputStats] = None):
+        self.pm = power_model
+        self.cap_w = power_cap_w
+        self.stats = stats or ThroughputStats()
+
+    def dvfs(self, batch_size: int) -> Optional[DvfsState]:
+        """DVFS state sustaining the cap at full concurrency (None = f_max)."""
+        if self.cap_w is None or self.pm is None:
+            return None
+        return cap_frequency(self.cap_w, self.pm.terms(batch_size),
+                             self.pm.dev)
+
+    def apply_dvfs(self, batch_size: int) -> Optional[DvfsState]:
+        """Resolve and install the capped DVFS state on the power model."""
+        st = self.dvfs(batch_size)
+        if self.pm is not None:
+            self.pm.dvfs = st
+        return st
+
+    def max_slots(self, batch_size: int) -> int:
+        """Largest concurrency whose modeled average power fits the cap."""
+        if self.cap_w is None or self.pm is None:
+            return batch_size
+        n = 0
+        for i in range(1, batch_size + 1):
+            if self.pm.avg_power_w(i) <= self.cap_w:
+                n = i
+        return n
+
+    def admit(self, n_active: int, batch_size: int) -> bool:
+        return n_active < min(batch_size, self.max_slots(batch_size))
+
+    def should_shed(self, req: Request, tokens_ahead: int) -> bool:
+        """Shed when the predicted wait for the ``tokens_ahead`` queued/active
+        tokens in front of this request exceeds its TTL. A request with
+        nothing ahead of it is never shed — it would start immediately."""
+        if req.ttl_s is None or tokens_ahead <= 0:
+            return False
+        if self.stats.rate("decode") <= 0:
+            return False       # nothing measured yet: admit optimistically
+        return self.stats.predicted_wait_s(tokens_ahead) > req.ttl_s

@@ -1,13 +1,20 @@
 """Serving steps: prefill (builds KV caches / recurrent state) and decode
 (one new token against a cache of ``seq_len``). Cache sharding comes from the
 model's ``cache_axes()`` logical axes; for batch=1 long-context decode the
-``kv_seq`` rule is overridden to sequence-shard the cache (context/SP)."""
+``kv_seq`` rule is overridden to sequence-shard the cache (context/SP).
+
+``make_decode_step`` fuses sampling into the jitted step so the host loop
+syncs once per step for the whole batch (one [B,1] token fetch) instead of
+once per slot; ``pos`` may be a [B] vector for continuous batching.
+``make_slot_prefill`` prefills a single request into one batch row of the
+shared cache while the other rows keep their in-flight state."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.models.common import gather_cache_slot, scatter_cache_slot
 from repro.parallel.sharding import spec_for
 
 
@@ -19,11 +26,27 @@ def make_prefill_step(model):
 
 
 def make_decode_step(model, greedy=True):
-    def decode_step(params, tokens, pos, caches):
+    """Fused decode + in-jit sampling. ``pos``: scalar or [B] int32."""
+    def decode_step(params, tokens, pos, caches, key=None):
         logits, caches = model.decode_step(params, tokens, pos, caches)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if greedy or key is None:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            next_tok = jax.random.categorical(key, logits).astype(jnp.int32)
         return next_tok, logits, caches
     return decode_step
+
+
+def make_slot_prefill(model):
+    """Prefill one request ([1, S] tokens) into batch row ``slot`` of a
+    shared cache pytree; every other row is untouched. Distinct prompt
+    lengths retrace (jit caches one executable per S)."""
+    def slot_prefill(params, tokens, slot, caches):
+        sub = gather_cache_slot(caches, slot)
+        logits, sub = model.prefill(params, {"tokens": tokens}, sub)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, scatter_cache_slot(caches, sub, slot)
+    return slot_prefill
 
 
 def serve_rules(shape):
