@@ -3,34 +3,100 @@
 Derived columns assert the platform's headline numbers: 1000 SPS per probe,
 milliwatt resolution, 12-probe aggregation, tag attribution overhead — and
 the comparison against GRID'5000 (~50 SPS @ 0.1 W).
+
+Everything runs through the unified ``repro.telemetry`` API. Old-vs-columnar
+rows time the legacy per-``Sample``-object path (``session.board``) against
+the columnar ``SampleBlock`` path on identical streams (same probe seeds ->
+bit-equal watts), assert the energy totals agree to 1e-9 J, and report the
+speedup. ``--json PATH`` dumps every row for the CI perf-trajectory
+artifact.
+
+    PYTHONPATH=src python -m benchmarks.bench_energy_platform [--json PATH]
 """
+import argparse
+import json
+
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core.mainboard import MainBoard
-from repro.core.probe import MILLIWATT, REPORT_SPS, Probe, ProbeConfig, read_vectorized
+from repro.telemetry import (MILLIWATT, REPORT_SPS, MonitorSession,
+                             MutableSource, ProbeConfig, read_vectorized)
+
+READ_S = 0.5        # 12-probe read window (6000 samples/call)
+TAG_S = 2.0         # single-probe tag-attribution window (2000 samples)
+
+ROWS = {}
 
 
-def run():
-    mb = MainBoard()
-    for i in range(12):
-        mb.attach(Probe(lambda t: 80.0 + 10 * np.sin(t),
-                        ProbeConfig(probe_id=i)))
-    t = time_fn(lambda: mb.read_samples(0.05), warmup=1, iters=3)
-    n_samples = 12 * int(0.05 * REPORT_SPS)
-    emit("energy/mainboard_12probe", t,
-         f"{n_samples / t:.0f}samples/s_processed;hw_rate={REPORT_SPS}SPS")
+def record(name, seconds, derived=""):
+    emit(name, seconds, derived)
+    ROWS[name] = {"us_per_call": seconds * 1e6, "derived": derived}
+
+
+def _session(power_fn, n_probes=1):
+    """Identically seeded sessions produce bit-equal streams, so the
+    legacy and columnar paths can be compared head to head."""
+    return MonitorSession([power_fn] * n_probes, node="bench")
+
+
+def run(json_path=None):
+    power = lambda t: 80.0 + 10 * np.sin(t)   # noqa: E731 — array-capable
+
+    # -- main-board read: legacy Sample objects vs columnar SampleBlock -----
+    s_leg, s_col = _session(power, 12), _session(power, 12)
+    t_leg = time_fn(lambda: s_leg.board.read_samples(READ_S),
+                    warmup=1, iters=3)
+    t_col = time_fn(lambda: s_col.board.read_block(READ_S),
+                    warmup=1, iters=3)
+    n_samples = 12 * int(READ_S * REPORT_SPS)
+    record("energy/mainboard_read_legacy", t_leg,
+           f"{n_samples / t_leg:.0f}samples/s_processed;hw_rate={REPORT_SPS}SPS")
+    record("energy/mainboard_read_columnar", t_col,
+           f"{n_samples / t_col:.0f}samples/s_processed;"
+           f"speedup={t_leg / t_col:.1f}x_vs_legacy")
 
     t = time_fn(lambda: read_vectorized(lambda x: 95.0, 0.0, 10.0),
                 warmup=1, iters=3)
-    emit("energy/probe_vectorized_10s", t,
-         f"{10 * REPORT_SPS / t:.0f}samples/s;res={MILLIWATT * 1e3:.0f}mW")
+    record("energy/probe_vectorized_10s", t,
+           f"{10 * REPORT_SPS / t:.0f}samples/s;res={MILLIWATT * 1e3:.0f}mW")
 
-    with mb.tags.tag("fwd"):
-        samples = mb.read_samples(0.02)[0]
-    t = time_fn(lambda: MainBoard.energy_by_tag(samples), warmup=1, iters=5)
-    emit("energy/tag_attribution", t, f"grid5000_ratio={REPORT_SPS / 50:.0f}x")
+    # -- tag attribution: identical streams through both reduction paths ----
+    s_leg, s_col = _session(power), _session(power)
+    with s_leg.region("fwd"):
+        samples = s_leg.board.read_samples(TAG_S)[0]
+    with s_col.region("fwd"):
+        block = s_col.board.read_block(TAG_S)[0]
+    assert np.array_equal([s.watts for s in samples], block.watts), \
+        "legacy and columnar reads diverged on identical seeds"
+
+    board = type(s_leg.board)
+    t_leg = time_fn(lambda: board.energy_by_tag(samples), warmup=1, iters=5)
+    t_col = time_fn(lambda: block.energy_by_tag(), warmup=1, iters=5)
+    legacy_by_tag = board.energy_by_tag(samples)
+    col_by_tag = block.energy_by_tag()
+    err = max(abs(legacy_by_tag[k] - col_by_tag.get(k, 0.0))
+              for k in legacy_by_tag)
+    assert err < 1e-9, f"energy_by_tag paths disagree by {err} J"
+    record("energy/tag_attribution_legacy", t_leg,
+           f"grid5000_ratio={REPORT_SPS / 50:.0f}x")
+    record("energy/tag_attribution_columnar", t_col,
+           f"speedup={t_leg / t_col:.1f}x_vs_legacy;match_err={err:.1e}J")
+
+    # -- end-to-end MonitorSession sampling (the API every consumer uses) ---
+    session = MonitorSession(MutableSource(95.0), node="bench",
+                             probe_cfg=ProbeConfig())
+    t = time_fn(lambda: session.sample(READ_S, tags=("step",)),
+                warmup=1, iters=3)
+    record("energy/session_sample", t,
+           f"{READ_S * REPORT_SPS / t:.0f}samples/s")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(ROWS, f, indent=2, sort_keys=True)
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="dump rows as JSON (CI perf-trajectory artifact)")
+    run(ap.parse_args().json)

@@ -38,9 +38,10 @@ def main():
           f"peak {stats['peak_active']} active")
     print(f"decode: {stats['tokens_decoded']} tokens at "
           f"{stats['decode_tok_per_s']:.1f} tok/s")
-    print(f"board energy: {stats['energy_j']:.2f} J "
-          f"(by tag: { {k: round(v, 2) for k, v in stats['energy_by_tag'].items()} })")
-    print("\nper-request attribution:")
+    # the unified telemetry API: one typed report for the whole session
+    report = engine.tel.session.report(tokens=stats["tokens_decoded"])
+    print(f"board energy: {report}")
+    print("\nper-request attribution (tag-bus bitmask shares):")
     for r in engine.finished:
         print(f"  req {r.req_id}: {len(r.output):2d} tokens "
               f"[{r.finish_reason}] {r.energy_j:6.2f} J "

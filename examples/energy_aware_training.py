@@ -50,7 +50,8 @@ def main():
         step, state, data, loop_mod.LoopConfig(total_steps=8),
         roofline_terms=terms)
     print(f"\n8 telemetered steps: {summary['tokens']} tokens, "
-          f"{summary['energy_j']:.1f} J total, "
+          f"{summary['energy_j']:.1f} J total at "
+          f"{summary['avg_power_w']:.1f} W avg, "
           f"J/token={summary['j_per_token']:.4f}")
     print(f"per-tag attribution: "
           f"{ {k: round(v,1) for k,v in summary['energy_by_tag'].items()} }")

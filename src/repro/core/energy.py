@@ -15,6 +15,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Optional
 
+import numpy as np
+
 from repro.core.hw import DeviceSpec, TPU_V5E
 
 
@@ -97,9 +99,10 @@ def power_trace_fn(roofline_terms, dvfs=None, dev: DeviceSpec = TPU_V5E,
     t_step = period_s or step_time_s(roofline_terms, dvfs, dev)
     t_busy = busy_fraction(roofline_terms, dvfs, dev, t_step) * t_step
 
-    def fn(t: float) -> float:
-        phase = t % t_step
-        util = 1.0 if phase < t_busy else STALL_UTIL
+    def fn(t):
+        # np.where keeps the trace array-capable: the columnar probe path
+        # evaluates whole timestamp windows in one call
+        util = np.where(t % t_step < t_busy, 1.0, STALL_UTIL)
         return power_w(dev, util, dvfs)
 
     return fn
@@ -138,9 +141,9 @@ def scaled_power_trace_fn(roofline_terms, wall_s: float,
     """
     busy_frac = busy_fraction(roofline_terms, dvfs, dev)
 
-    def fn(t: float) -> float:
-        phase = (t % wall_s) / wall_s if wall_s > 0 else 1.0
-        util = 1.0 if phase < busy_frac else STALL_UTIL
+    def fn(t):
+        phase = (t % wall_s) / wall_s if wall_s > 0 else np.ones_like(t)
+        util = np.where(phase < busy_frac, 1.0, STALL_UTIL)
         return power_w(dev, util, dvfs)
 
     return fn

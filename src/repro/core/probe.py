@@ -10,11 +10,24 @@ The probe is *driven* by a power model (``power_fn(t) -> W``): in deployment
 that is the physical node; here it is the simulated node power trace (DVFS
 model x utilization), which lets every energy experiment in the paper run
 bit-faithfully on this cluster-less container.
+
+Two read paths share one arithmetic pipeline (clip -> noise -> floor ->
+average -> mW quantize), so they agree bit-for-bit:
+
+``Probe.read``        per-object ``Sample`` list (legacy hosts/tests);
+``Probe.read_block``  columnar ``(t, watts)`` arrays — the default under
+                      ``repro.telemetry`` — evaluating the power function on
+                      whole timestamp arrays when it supports that.
+
+Both accept a report rate ``sps`` below ``REPORT_SPS``: an oversubscribed
+I2C bus ships fewer reports per probe (decimation), so the averaging window
+of each surviving report stays the INA228's 4-raw-sample configuration while
+the stream's integration dt grows to ``1/sps``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -35,6 +48,7 @@ class Sample:
     watts: float
     n_avg: int
     tags: tuple = ()    # GPIO tags active when the sample was taken
+    dt: float = 1.0 / REPORT_SPS    # this report's integration period
 
 
 @dataclasses.dataclass
@@ -46,6 +60,46 @@ class ProbeConfig:
     seed: int = 0
 
 
+def _eval_power(power_fn: Callable, t: np.ndarray) -> np.ndarray:
+    """Evaluate ``power_fn`` over a timestamp array, vectorized when the
+    function supports arrays. Scalar-only functions (TypeError/ValueError
+    on array input, or a scalar result) fall back to a per-element loop;
+    any other exception is a real bug in the power function and propagates."""
+    try:
+        w = np.asarray(power_fn(t), dtype=np.float64)
+    except (TypeError, ValueError):
+        w = None
+    if w is not None and w.shape == t.shape:
+        return w
+    if w is not None and w.shape == ():
+        return np.full(t.shape, float(w))
+    return np.fromiter((float(power_fn(x)) for x in t), np.float64,
+                       count=t.size).reshape(t.shape)
+
+
+def _report_grid(t0: float, duration: float,
+                 sps: float) -> Tuple[np.ndarray, np.ndarray]:
+    """(report timestamps [n], raw timestamps [n, AVG_N]) for a read.
+
+    Reports land at ``t0 + (i+1)/sps``; each averages the AVG_N raw
+    conversions immediately preceding it at RAW_SPS spacing (at full rate
+    this is exactly the contiguous 4000 SPS raw stream)."""
+    n = int(round(duration * sps))
+    t_rep = t0 + (np.arange(n, dtype=np.float64) + 1) / sps
+    offs = (np.arange(AVG_N, dtype=np.float64) - (AVG_N - 1)) / RAW_SPS
+    return t_rep, t_rep[:, None] + offs[None, :]
+
+
+def _pipeline(raw_w: np.ndarray, cfg: ProbeConfig,
+              rng: np.random.Generator) -> np.ndarray:
+    """clip -> noise -> floor -> average -> mW quantize (shared by all
+    read paths; identical arithmetic order keeps them bit-equal)."""
+    w = np.clip(raw_w, 0.0, cfg.max_watts)
+    w = np.maximum(w + rng.normal(0.0, cfg.noise_w, w.shape), 0.0)
+    watts = w.mean(axis=-1)
+    return np.round(watts / MILLIWATT) * MILLIWATT
+
+
 class Probe:
     """Streams averaged samples from a power function."""
 
@@ -55,38 +109,36 @@ class Probe:
         self.cfg = cfg or ProbeConfig()
         self._rng = np.random.default_rng(self.cfg.seed + self.cfg.probe_id)
 
-    def read(self, t0: float, duration: float) -> List[Sample]:
-        """Samples in [t0, t0+duration): ``REPORT_SPS`` per second."""
-        n_reports = int(round(duration * REPORT_SPS))
-        out = []
+    def read_block(self, t0: float, duration: float,
+                   sps: Optional[float] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Columnar read: ``(t [n], watts [n])`` at ``sps`` reports/s
+        (default ``REPORT_SPS``) in (t0, t0+duration]."""
         cfg = self.cfg
-        for i in range(n_reports):
-            t_rep = t0 + (i + 1) / REPORT_SPS
-            raw_w = []
-            for j in range(AVG_N):
-                t_raw = t0 + (i * AVG_N + j + 1) / RAW_SPS
-                w = float(np.clip(self.power_fn(t_raw), 0.0, cfg.max_watts))
-                w += float(self._rng.normal(0.0, cfg.noise_w))
-                raw_w.append(max(w, 0.0))
-            watts = sum(raw_w) / AVG_N
-            # milliwatt quantization (paper: mW-level resolution)
-            watts = round(watts / MILLIWATT) * MILLIWATT
-            volts = cfg.volts_nominal
-            amps = watts / volts if volts else 0.0
-            out.append(Sample(t_rep, volts, round(amps, 6), watts, AVG_N))
-        return out
+        t_rep, t_raw = _report_grid(t0, duration, sps or REPORT_SPS)
+        raw_w = _eval_power(self.power_fn, t_raw.ravel()).reshape(t_raw.shape)
+        return t_rep, _pipeline(raw_w, cfg, self._rng)
+
+    def read(self, t0: float, duration: float,
+             sps: Optional[float] = None) -> List[Sample]:
+        """Samples in (t0, t0+duration] as ``Sample`` objects, carrying the
+        stream's actual report period (``1/sps``) for energy integration."""
+        cfg = self.cfg
+        t_rep, watts = self.read_block(t0, duration, sps)
+        volts = cfg.volts_nominal
+        dt = 1.0 / (sps or REPORT_SPS)
+        return [Sample(float(t), volts,
+                       round(float(w) / volts, 6) if volts else 0.0,
+                       float(w), AVG_N, dt=dt)
+                for t, w in zip(t_rep, watts)]
 
 
 def read_vectorized(power_fn, t0: float, duration: float,
-                    cfg: Optional[ProbeConfig] = None) -> np.ndarray:
-    """Vectorized variant for long traces: returns [n, 2] (t, watts)."""
+                    cfg: Optional[ProbeConfig] = None,
+                    sps: Optional[float] = None) -> np.ndarray:
+    """Vectorized one-shot read (fresh rng from the config seed): returns
+    [n, 2] (t, watts). ``Probe.read_block`` is the stateful equivalent."""
     cfg = cfg or ProbeConfig()
-    n_raw = int(round(duration * RAW_SPS))
-    t = t0 + (np.arange(n_raw) + 1) / RAW_SPS
-    w = np.clip(np.vectorize(power_fn)(t), 0.0, cfg.max_watts)
     rng = np.random.default_rng(cfg.seed + cfg.probe_id)
-    w = np.maximum(w + rng.normal(0.0, cfg.noise_w, n_raw), 0.0)
-    w = w[: (n_raw // AVG_N) * AVG_N].reshape(-1, AVG_N).mean(axis=1)
-    w = np.round(w / MILLIWATT) * MILLIWATT
-    t_rep = t0 + (np.arange(w.shape[0]) + 1) / REPORT_SPS
-    return np.stack([t_rep, w], axis=1)
+    t_rep, t_raw = _report_grid(t0, duration, sps or REPORT_SPS)
+    raw_w = _eval_power(power_fn, t_raw.ravel()).reshape(t_raw.shape)
+    return np.stack([t_rep, _pipeline(raw_w, cfg, rng)], axis=1)

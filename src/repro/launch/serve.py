@@ -6,7 +6,7 @@
 Serves synthetic prompts through either engine — ``static`` (padded batch,
 lock-step decode) or ``continuous`` (request queue, slot recycling,
 energy-aware admission) — with per-request energy attribution from the
-telemetry tag bus.
+``repro.telemetry`` tag bus and a typed ``EnergyReport`` summary.
 """
 from __future__ import annotations
 
@@ -56,7 +56,7 @@ def main(argv=None):
         stats["decode_tok_per_s"] = (stats["tokens_decoded"] /
                                      stats["decode_s"] if stats.get("decode_s")
                                      else 0.0)
-        stats["energy_by_tag"] = engine.tel.energy_stats()["energy_by_tag"]
+        stats["energy_by_tag"] = dict(engine.tel.session.report().by_tag)
     else:
         engine = ContinuousEngine(model, params, batch_size=args.batch,
                                   max_seq=args.max_seq,
@@ -67,9 +67,10 @@ def main(argv=None):
           f"prefill={stats['prefill_s']*1e3:.0f}ms "
           f"decode={stats['decode_s']*1e3:.0f}ms "
           f"({stats['decode_tok_per_s']:.1f} tok/s)")
-    if "energy_by_tag" in stats:
-        print("energy by tag (J):",
-              {k: round(v, 2) for k, v in stats["energy_by_tag"].items()})
+    if engine.tel is not None:
+        # full-session telemetry report from the unified API
+        rep = engine.tel.session.report(tokens=stats.get("tokens_decoded"))
+        print(f"energy: {rep}")
     for r in reqs:
         j_tok = r.energy_j / max(len(r.output), 1)
         print(f"  req {r.req_id}: {len(r.output)} tokens "

@@ -5,8 +5,8 @@
 
 --smoke uses the reduced same-family config (CPU-runnable); on a TPU
 deployment drop --smoke and set --mesh-data/--mesh-model to the pod shape.
-Integrates checkpointing (atomic, resumable), telemetry (J/token), and the
-energy-aware loop.
+Integrates checkpointing (atomic, resumable), ``repro.telemetry``
+energy monitoring (J/token, per-tag attribution), and the energy-aware loop.
 """
 from __future__ import annotations
 
@@ -82,6 +82,7 @@ def main(argv=None):
         train_step, state, data, loop_cfg, on_step=on_step)
     print(f"final loss {history[-1]['loss']:.4f}  "
           f"J/token {summary['j_per_token']:.4f}  "
+          f"avg {summary['avg_power_w']:.1f} W  "
           f"tags {list(summary['energy_by_tag'])}")
     if args.log_json:
         with open(args.log_json, "w") as f:

@@ -1,8 +1,9 @@
 """Serving engines with energy-attributed telemetry.
 
-Two engines share one telemetry pipeline (MainBoard + INA228 probe + GPIO
-tag bus, paper Sec. 4.1), with power traces *derived* from the roofline/DVFS
-energy model (``core.energy.ServePowerModel``) — no hardcoded watt constants:
+Two engines share one telemetry pipeline (a ``repro.telemetry``
+``MonitorSession`` over the paper Sec. 4.1 probe/board/tag-bus platform),
+with power traces *derived* from the roofline/DVFS energy model
+(``core.energy.ServePowerModel``) — no hardcoded watt constants:
 
 ``ServeEngine``      static-batch baseline: one padded prefill, lock-step
                      decode until every request in the batch finishes.
@@ -16,6 +17,7 @@ energy model (``core.energy.ServePowerModel``) — no hardcoded watt constants:
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Dict, List, Optional
 
@@ -25,14 +27,13 @@ import numpy as np
 
 from repro.core.energy import ServePowerModel
 from repro.core.hw import DeviceSpec, TPU_V5E
-from repro.core.mainboard import MainBoard
-from repro.core.probe import REPORT_SPS, Probe
 from repro.core.scheduler import ThroughputStats
 from repro.core.tags import N_GPIO
 from repro.models.common import reset_cache_slot
 from repro.serve.queue import AdmissionController, Request, RequestQueue
 from repro.serve.slots import SlotManager
 from repro.serve.step import make_decode_step, make_slot_prefill
+from repro.telemetry import ModelSource, MonitorSession
 
 __all__ = ["Request", "ServeEngine", "ContinuousEngine", "EngineTelemetry"]
 
@@ -49,7 +50,7 @@ def _cache_bytes(model, batch_size, max_seq) -> float:
 
 
 class EngineTelemetry:
-    """Board + probe + tag-bus wiring shared by both engines.
+    """Engine-side policy over a ``repro.telemetry`` ``MonitorSession``.
 
     Phase tags ("prefill"/"decode") use two GPIO channels; the remaining
     channels carry per-slot tags so board energy can be attributed to the
@@ -64,18 +65,9 @@ class EngineTelemetry:
     def __init__(self, power_model: ServePowerModel, batch_size: int,
                  node: str = "serve-node"):
         self.pm = power_model
-        self.board = MainBoard(node)
-        self.board.attach(Probe(self._power))
-        self.samples = []
+        self.source = ModelSource(power_model)
+        self.session = MonitorSession(self.source, node=node)
         self.n_slot_tags = max(1, min(batch_size, N_GPIO - self.N_PHASE_TAGS))
-        self._trace = None
-        self._t0 = 0.0
-        self._cursor = 0.0
-
-    def _power(self, t: float) -> float:
-        if self._trace is None:
-            return self.pm.idle_power_w()
-        return self._trace(t - self._t0)
 
     def slot_tag(self, slot_index: int) -> str:
         return f"s{slot_index % self.n_slot_tags}"
@@ -83,47 +75,35 @@ class EngineTelemetry:
     def record(self, phase: str, wall_s: float, n_tokens: int,
                slot_to_req: Dict[int, Request]):
         """Sample ``wall_s`` of board power under ``phase`` + slot tags and
-        attribute each sample's energy to the requests owning the slots.
+        attribute each sample's energy to the requests owning the slots
+        (vectorized bitmask share computation on the columnar block).
 
-        The probe emits ``round(duration * REPORT_SPS)`` samples per read;
-        windows are kept on the global 1-kHz sample grid so sub-millisecond
-        steps carry their fraction into the next window instead of silently
-        dropping energy (the residual is bounded by one sample period)."""
+        ``session.sample`` keeps windows on the global 1-kHz grid, so
+        sub-millisecond steps carry their fraction into the next window
+        instead of silently dropping energy."""
         if wall_s <= 0:
-            return []
-        self._trace = self.pm.trace(n_tokens, wall_s)
-        self._t0 = self._cursor
-        end = self._cursor + wall_s
-        read_s = (round(end * REPORT_SPS)
-                  - round(self._cursor * REPORT_SPS)) / REPORT_SPS
+            return None
+        self.source.set_step(n_tokens, wall_s, t0=self.session.cursor)
         tag_groups: Dict[str, List[Request]] = {}
         for idx, req in slot_to_req.items():
             tag_groups.setdefault(self.slot_tag(idx), []).append(req)
-        tags = [phase] + sorted(tag_groups)
-        for tg in tags:
-            self.board.tags.raise_(tg)
-        out = self.board.read_samples(read_s) if read_s > 0 else {}
-        for tg in reversed(tags):
-            self.board.tags.lower(tg)
-        self.board.advance(wall_s - read_s)   # keep board clock on wall time
-        self._cursor = end
-        self._trace = None
-        samples = [s for stream in out.values() for s in stream]
-        self.samples.extend(samples)
-        dt = 1.0 / REPORT_SPS
-        for s in samples:
-            sharers = [r for tg in s.tags for r in tag_groups.get(tg, ())]
-            if sharers:
-                share = s.watts * dt / len(sharers)
-                for r in sharers:
+        try:
+            block = self.session.sample(wall_s,
+                                        tags=[phase] + sorted(tag_groups))
+        finally:
+            self.source.clear()
+        per_tag = block.split_energy(
+            {tg: len(reqs) for tg, reqs in tag_groups.items()})
+        for tg, reqs in tag_groups.items():
+            share = per_tag.get(tg, 0.0) / len(reqs)
+            if share:
+                for r in reqs:
                     r.energy_j += share
-        return samples
+        return block
 
     def energy_stats(self) -> Dict:
-        return {
-            "energy_j": MainBoard.energy_j(self.samples),
-            "energy_by_tag": MainBoard.energy_by_tag(self.samples),
-        }
+        rep = self.session.report()
+        return {"energy_j": rep.energy_j, "energy_by_tag": dict(rep.by_tag)}
 
 
 # ---------------------------------------------------------------------------
@@ -162,8 +142,18 @@ class ServeEngine:
                for _ in range(self.batch_size - len(reqs))]
         tokens, s = self._pad_prompts(reqs + pad)
         caches = self.model.init_cache(self.batch_size, self.max_seq)
-        n0 = len(self.tel.samples) if self.tel else 0
+        win_cm = (self.tel.session.window() if self.tel
+                  else contextlib.nullcontext())
+        with win_cm as win:
+            stats = self._serve_batch(reqs, tokens, s, caches)
+        if self.tel:
+            rep = win.report()      # this call's grid-aligned energy window
+            stats["energy_j"] = rep.energy_j
+            stats["energy_by_tag"] = dict(rep.by_tag)
+        return stats
 
+    def _serve_batch(self, reqs: List[Request], tokens, s: int,
+                     caches) -> Dict:
         t0 = time.perf_counter()
         logits, caches = self._prefill(self.params, {"tokens": tokens}, caches)
         cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -208,18 +198,13 @@ class ServeEngine:
             if self.tel:
                 self.tel.record("decode", dt, len(active), active)
 
-        stats = {
+        return {
             "prefill_s": t_prefill,
             "decode_s": t_dec,
             "decode_steps": step,
             "tokens_decoded": n_decoded,
             "decode_tok_per_s": n_decoded / t_dec if t_dec else 0.0,
         }
-        if self.tel:
-            win = self.tel.samples[n0:]     # this call's sample window
-            stats["energy_j"] = MainBoard.energy_j(win)
-            stats["energy_by_tag"] = MainBoard.energy_by_tag(win)
-        return stats
 
 
 # ---------------------------------------------------------------------------
@@ -409,4 +394,4 @@ class ContinuousEngine:
         self.queue = RequestQueue()
         self.slots = SlotManager(self.batch_size, self.max_seq)
         if self.tel:
-            self.tel.samples = []
+            self.tel.session.reset()

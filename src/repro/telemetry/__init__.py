@@ -1,0 +1,30 @@
+"""Unified telemetry API for the paper's energy-monitoring platform.
+
+Everything outside this package consumes the measurement pipeline (INA228
+probes -> PIC18 main board -> 8-line GPIO tag bus, paper Sec. 4) through
+:class:`MonitorSession`:
+
+- :mod:`~repro.telemetry.source` — what the probes measure (``ModelSource``
+  for roofline/DVFS traces, ``MutableSource`` for host-updated power,
+  ``TraceSource`` for recorded arrays);
+- :mod:`~repro.telemetry.session` — ``MonitorSession`` facade: region
+  tagging, grid-aligned sampling windows, typed ``EnergyReport``;
+- :mod:`~repro.telemetry.samples` — columnar ``SampleBlock`` streams
+  (numpy columns + per-sample GPIO bitmask) with vectorized energy
+  reductions and a lazy legacy ``Sample`` view.
+"""
+from repro.core.probe import (AVG_N, MILLIWATT, RAW_SPS, REPORT_SPS,
+                              ProbeConfig, read_vectorized)
+from repro.telemetry.samples import SampleBlock, SampleView, read_board_blocks
+from repro.telemetry.session import EnergyReport, MonitorSession, Window
+from repro.telemetry.source import (ModelSource, MutableSource, PowerSource,
+                                    TraceSource, constant)
+
+__all__ = [
+    "MonitorSession", "Window", "EnergyReport",
+    "SampleBlock", "SampleView", "read_board_blocks",
+    "PowerSource", "ModelSource", "MutableSource", "TraceSource", "constant",
+    # platform constants / probe config re-exported for consumers
+    "ProbeConfig", "read_vectorized",
+    "AVG_N", "MILLIWATT", "RAW_SPS", "REPORT_SPS",
+]

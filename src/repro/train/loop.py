@@ -1,9 +1,9 @@
 """Training loop with the paper's energy platform as a first-class citizen.
 
 Integrates: data prefetch, jitted train step, atomic async checkpoints,
-region-tagged energy telemetry (probe/main-board pipeline), DVFS power
-capping, and fault-tolerant restart (resume from the newest committed
-checkpoint + step-indexed data).
+region-tagged energy telemetry (a ``repro.telemetry`` ``MonitorSession``
+over the probe/main-board pipeline), DVFS power capping, and fault-tolerant
+restart (resume from the newest committed checkpoint + step-indexed data).
 """
 from __future__ import annotations
 
@@ -17,9 +17,8 @@ import numpy as np
 from repro.checkpoint import ckpt as ckpt_mod
 from repro.core import energy as energy_mod
 from repro.core.hw import TPU_V5E
-from repro.core.mainboard import MainBoard
-from repro.core.probe import Probe
 from repro.data.pipeline import Prefetcher
+from repro.telemetry import MonitorSession, MutableSource
 
 
 @dataclasses.dataclass
@@ -33,31 +32,14 @@ class LoopConfig:
     n_chips: int = 1
 
 
-class Telemetry:
-    """Node power telemetry: one main board + probe per simulated node.
-
-    Power is derived from the measured step time and the roofline terms
-    (utilization model), then streamed through the INA228/main-board pipeline
-    at 1000 SPS so tag-level energy attribution works exactly as on DALEK.
-    """
-
-    def __init__(self, dev=TPU_V5E):
-        self.board = MainBoard("train-node")
-        self.dev = dev
-        self._power_w = dev.idle_w
-        self.board.attach(Probe(lambda t: self._power_w))
-        self.samples = []
-
-    def step(self, wall_s: float, util: float = 1.0, dvfs=None):
-        self._power_w = energy_mod.power_w(self.dev, util, dvfs)
-        for sl in self.board.read_samples(wall_s).values():
-            self.samples.extend(sl)
-
-    def energy_j(self) -> float:
-        return MainBoard.energy_j(self.samples)
-
-    def energy_by_tag(self) -> Dict[str, float]:
-        return MainBoard.energy_by_tag(self.samples)
+def make_session(dev=TPU_V5E, node: str = "train-node"):
+    """Training telemetry: a ``MonitorSession`` over a host-updated power
+    source. Each step derives node power from the measured step time and
+    the roofline terms (utilization model), sets it on the source, and
+    samples the 1000 SPS pipeline — tag-level attribution works exactly as
+    on DALEK."""
+    source = MutableSource(dev.idle_w)
+    return MonitorSession(source, node=node), source
 
 
 def run(train_step, state, data, loop_cfg: LoopConfig,
@@ -65,7 +47,8 @@ def run(train_step, state, data, loop_cfg: LoopConfig,
         roofline_terms: Optional[Dict[str, float]] = None,
         on_step: Optional[Callable] = None):
     """Run training; returns (state, history)."""
-    telem = Telemetry()
+    session, power = make_session()
+    dev = TPU_V5E
     saver = ckpt_mod.AsyncSaver()
     start_step = 0
     if loop_cfg.ckpt_dir:
@@ -89,7 +72,7 @@ def run(train_step, state, data, loop_cfg: LoopConfig,
             idx, batch = prefetch.next()
             assert idx == step, (idx, step)
             t0 = time.perf_counter()
-            with telem.board.tags.tag("train_step"):
+            with session.region("train_step"):
                 state, metrics = train_step(state, batch)
                 metrics = jax.tree.map(
                     lambda x: np.asarray(jax.device_get(x)), metrics)
@@ -100,18 +83,19 @@ def run(train_step, state, data, loop_cfg: LoopConfig,
                     util = min(roofline_terms["compute"] / max(t_pred, 1e-9), 1.0)
                 # sample the probes across the step's wall time while the
                 # GPIO tag is high (paper: tag-synchronized measurement)
-                telem.step(wall, util, dvfs)
+                power.set(energy_mod.power_w(dev, util, dvfs))
+                session.sample(wall)
             tokens_seen += int(np.prod(batch["tokens"].shape))
             rec = {"step": step + 1, "wall_s": wall,
                    "loss": float(metrics.get("loss", np.nan)),
                    "grad_norm": float(metrics.get("grad_norm", np.nan)),
-                   "energy_j": telem.energy_j() * loop_cfg.n_chips,
+                   "energy_j": session.energy_j() * loop_cfg.n_chips,
                    "tokens": tokens_seen}
             history.append(rec)
             if on_step:
                 on_step(rec)
             if loop_cfg.ckpt_dir and (step + 1) % loop_cfg.ckpt_every == 0:
-                with telem.board.tags.tag("checkpoint"):
+                with session.region("checkpoint"):
                     saver.save(state, loop_cfg.ckpt_dir, step + 1)
                 ckpt_mod.prune(loop_cfg.ckpt_dir, loop_cfg.ckpt_keep)
         if loop_cfg.ckpt_dir:
@@ -119,11 +103,14 @@ def run(train_step, state, data, loop_cfg: LoopConfig,
             saver.wait()
     finally:
         prefetch.close()
+    report = session.report(tokens=tokens_seen)
     summary = {
-        "energy_j": telem.energy_j() * loop_cfg.n_chips,
-        "energy_by_tag": telem.energy_by_tag(),
+        "energy_j": report.energy_j * loop_cfg.n_chips,
+        "energy_by_tag": dict(report.by_tag),
+        # all-chip average power, consistent with the scaled energy_j
+        "avg_power_w": report.avg_power_w * loop_cfg.n_chips,
         "tokens": tokens_seen,
-        "j_per_token": (telem.energy_j() * loop_cfg.n_chips
+        "j_per_token": (report.energy_j * loop_cfg.n_chips
                         / max(tokens_seen, 1)),
     }
     return state, history, summary

@@ -64,6 +64,23 @@ def test_gpio_tag_energy_attribution():
             mb.tags.raise_(f"t{i}")
 
 
+def test_mainboard_columnar_read_matches_legacy():
+    """`read_block` (the `repro.telemetry` hot path) and `read_samples`
+    produce identical streams from identically seeded probes."""
+    legacy, columnar = MainBoard(), MainBoard()
+    for mb in (legacy, columnar):
+        mb.attach(Probe(lambda t: 80.0 + 5 * np.sin(t), ProbeConfig()))
+    with legacy.tags.tag("fwd"):
+        samples = legacy.read_samples(0.1)[0]
+    with columnar.tags.tag("fwd"):
+        block = columnar.read_block(0.1)[0]
+    assert block.n == len(samples) == 100
+    assert np.array_equal(block.watts, [s.watts for s in samples])
+    assert abs(MainBoard.energy_j(samples) - block.energy_j()) < 1e-9
+    by_leg, by_col = MainBoard.energy_by_tag(samples), block.energy_by_tag()
+    assert abs(by_leg["fwd"] - by_col["fwd"]) < 1e-9
+
+
 def test_dvfs_cubic_power_monotone():
     dev = hw.TPU_V5E
     powers = [energy.power_w(dev, 1.0, energy.DvfsState(f))

@@ -1,0 +1,347 @@
+"""Unified telemetry API (`repro.telemetry`): MonitorSession invariants,
+columnar-vs-legacy equivalence, TagBus channel recycling, and I2C bus
+oversubscription fidelity. Each property is tied to a platform guarantee
+the rest of the stack (train loop, serving engines) relies on."""
+import numpy as np
+import pytest
+
+from repro.core.mainboard import BUS_MAX_SPS, MainBoard, PROBES_PER_BUS
+from repro.core.probe import REPORT_SPS, Probe, ProbeConfig
+from repro.core.tags import N_GPIO, TagBus
+from repro.telemetry import (EnergyReport, ModelSource, MonitorSession,
+                             MutableSource, SampleBlock, TraceSource)
+
+
+def _clock():
+    """Manually advanced clock for standalone TagBus tests."""
+    state = {"t": 0.0}
+
+    def now():
+        return state["t"]
+
+    now.advance = lambda dt: state.__setitem__("t", state["t"] + dt)
+    return now
+
+
+# ---------------------------------------------------------------------------
+# TagBus: channel recycling + compiled interval index
+
+
+def test_tagbus_channels_recycle_after_release():
+    bus = TagBus(clock=_clock())
+    # far more distinct names than GPIO lines, sequentially: must not leak
+    for i in range(3 * N_GPIO):
+        with bus.tag(f"region_{i}"):
+            pass
+    # the 8-concurrent hardware limit still holds
+    for i in range(N_GPIO):
+        bus.raise_(f"c{i}")
+    with pytest.raises(RuntimeError):
+        bus.raise_("one_too_many")
+    # lowering one frees its line for a brand-new name
+    bus.lower("c3")
+    bus.raise_("late_arrival")          # must not raise
+    assert "late_arrival" in bus.active_now()
+
+
+def test_tagbus_index_matches_brute_replay():
+    rng = np.random.default_rng(0)
+    clock = _clock()
+    bus = TagBus(clock=clock)
+    live = []
+    for _ in range(200):
+        clock.advance(float(rng.uniform(0.001, 0.01)))
+        if live and rng.random() < 0.45:
+            bus.lower(live.pop(rng.integers(len(live))))
+        elif len(live) < N_GPIO:
+            name = f"t{rng.integers(6)}_{rng.integers(1000)}"
+            if name not in live:
+                bus.raise_(name)
+                live.append(name)
+
+    def brute(t):
+        high = {}
+        for et, idx, name, up in bus._events:
+            if et > t:
+                break
+            if up:
+                high[idx] = name
+            else:
+                high.pop(idx, None)
+        return tuple(sorted(high.values()))
+
+    ts = rng.uniform(-0.01, clock() + 0.01, 300)
+    for t in ts:
+        assert bus.active_at(float(t)) == brute(float(t))
+
+
+def test_tagbus_index_incremental_after_new_events():
+    clock = _clock()
+    bus = TagBus(clock=clock)
+    bus.raise_("a")
+    assert bus.active_at(clock()) == ("a",)     # compiles the index
+    clock.advance(1.0)
+    bus.lower("a")
+    clock.advance(1.0)
+    bus.raise_("b")                             # extends compiled timeline
+    assert bus.active_at(0.5) == ("a",)
+    assert bus.active_at(1.5) == ()
+    assert bus.active_at(clock()) == ("b",)
+
+
+# ---------------------------------------------------------------------------
+# Columnar path vs legacy per-object path
+
+
+def _twin_boards(noise_w=0.005):
+    """Two boards with identically seeded probes: their reads are
+    bit-equal, so the per-object and columnar paths can be compared."""
+    a, b = MainBoard(), MainBoard()
+    for mb in (a, b):
+        mb.attach(Probe(lambda t: 90.0 + 20 * np.sin(40 * t),
+                        ProbeConfig(noise_w=noise_w)))
+    return a, b
+
+
+def _scripted_reads(mb, reader):
+    """Overlapping regions + tag recycling across several reads."""
+    out = []
+    with mb.tags.tag("outer"):
+        out.append(reader(mb, 0.05))
+        with mb.tags.tag("inner"):
+            out.append(reader(mb, 0.031))
+        out.append(reader(mb, 0.02))
+    with mb.tags.tag("reused_line"):    # recycles the line "inner" used
+        out.append(reader(mb, 0.04))
+    return out
+
+
+def test_bitmask_attribution_matches_string_tuples_bit_for_bit():
+    mb_leg, mb_col = _twin_boards()
+    legacy = _scripted_reads(mb_leg, lambda mb, d: mb.read_samples(d)[0])
+    blocks = _scripted_reads(mb_col, lambda mb, d: mb.read_block(d)[0])
+    for samples, block in zip(legacy, blocks):
+        view = block.samples()
+        assert len(view) == len(samples)
+        for s_leg, s_col in zip(samples, view):
+            assert s_col.t == s_leg.t
+            assert s_col.watts == s_leg.watts          # bit-equal pipeline
+            assert s_col.tags == s_leg.tags            # bitmask == tuples
+        by_leg = MainBoard.energy_by_tag(samples)
+        by_col = block.energy_by_tag()
+        assert set(by_leg) == set(by_col)
+        for k in by_leg:
+            assert abs(by_leg[k] - by_col[k]) < 1e-9
+
+
+def test_split_energy_matches_legacy_equal_share_loop():
+    mb_leg, mb_col = _twin_boards()
+    groups = {"outer": 3, "inner": 2, "reused_line": 1}
+    legacy = [s for chunk in
+              _scripted_reads(mb_leg, lambda mb, d: mb.read_samples(d)[0])
+              for s in chunk]
+    block = SampleBlock.concat(
+        _scripted_reads(mb_col, lambda mb, d: mb.read_block(d)[0]))
+
+    # reference: the old EngineTelemetry per-sample equal-share loop
+    dt = 1.0 / REPORT_SPS
+    want = {k: 0.0 for k in groups}
+    for s in legacy:
+        sharers = sum(groups[t] for t in s.tags if t in groups)
+        if sharers:
+            for t in s.tags:
+                if t in groups:
+                    want[t] += s.watts * dt * groups[t] / sharers
+
+    got = block.split_energy(groups)
+    for k in groups:
+        assert abs(got.get(k, 0.0) - want[k]) < 1e-9
+    # shares partition the energy of every sample carrying >=1 group tag
+    tagged = block.tag_mask("outer") | block.tag_mask("inner") \
+        | block.tag_mask("reused_line")
+    tagged_j = float((block.watts * block.dt)[tagged].sum())
+    assert abs(sum(got.values()) - tagged_j) < 1e-9
+
+
+def test_per_tag_energy_bounded_by_total():
+    rng = np.random.default_rng(1)
+    src = MutableSource(0.0)
+    session = MonitorSession(src, node="prop")
+    for step in range(12):
+        src.set(float(rng.uniform(10.0, 200.0)))
+        tags = [f"r{j}" for j in range(rng.integers(0, 4))]
+        for t in tags:
+            session.tags.raise_(t)
+        session.sample(float(rng.uniform(0.003, 0.05)))
+        for t in reversed(tags):
+            session.tags.lower(t)
+    rep = session.report()
+    assert rep.energy_j > 0
+    for tag, e in rep.by_tag.items():
+        assert 0.0 <= e <= rep.energy_j + 1e-9, tag
+
+
+# ---------------------------------------------------------------------------
+# MonitorSession: grid alignment, windows, reports
+
+
+def test_window_alignment_residual_within_one_sample_period():
+    rng = np.random.default_rng(2)
+    session = MonitorSession(MutableSource(100.0), node="grid")
+    n_total = 0
+    for _ in range(40):
+        wall = float(rng.uniform(0.0001, 0.0123))   # mostly off-grid
+        block = session.sample(wall)
+        n_total += block.n
+        # cumulative sampled time never drifts more than one period from
+        # cumulative wall time (fractions roll into the next window)
+        residual = abs(session.cursor - n_total / REPORT_SPS)
+        assert residual <= 1.0 / REPORT_SPS + 1e-12
+    assert n_total == round(session.cursor * REPORT_SPS)
+
+
+def test_session_window_scopes_report():
+    src = MutableSource(50.0)
+    session = MonitorSession(src, probe_cfg=ProbeConfig(noise_w=0.0))
+    session.sample(0.05)
+    with session.window() as w:
+        src.set(200.0)
+        session.sample(0.1)
+    src.set(50.0)
+    session.sample(0.05)
+    rep = w.report(tokens=10)
+    assert rep.n_samples == 100
+    assert abs(rep.duration_s - 0.1) < 1e-9
+    assert abs(rep.energy_j - 20.0) < 0.1          # 200 W * 0.1 s
+    assert abs(rep.j_per_token - rep.energy_j / 10) < 1e-12
+    total = session.report()
+    assert abs(total.energy_j - (20.0 + 2 * 2.5)) < 0.2
+    assert total.n_samples == 200
+    # O(1) running total agrees with the full reduction
+    assert abs(session.energy_j() - total.energy_j) < 1e-12
+
+
+def test_session_region_tags_samples():
+    src = MutableSource(100.0)
+    session = MonitorSession(src, probe_cfg=ProbeConfig(noise_w=0.0))
+    with session.region("fwd"):
+        session.sample(0.1)
+    session.sample(0.1)
+    rep = session.report()
+    assert abs(rep.by_tag["fwd"] - 10.0) < 1e-6
+    assert abs(rep.energy_j - 20.0) < 1e-6
+    assert isinstance(rep, EnergyReport)
+
+
+def test_session_reset_clears_samples_keeps_clock():
+    session = MonitorSession(MutableSource(10.0))
+    session.sample(0.1)
+    cursor = session.cursor
+    session.reset()
+    assert session.cursor == cursor
+    assert session.report().energy_j == 0.0
+    assert session.energy_j() == 0.0
+    session.sample(0.1)
+    assert session.report().n_samples == 100
+
+
+# ---------------------------------------------------------------------------
+# Sources
+
+
+def test_model_source_idles_between_steps():
+    class _PM:                                   # stands in for ServePowerModel
+        def idle_power_w(self):
+            return 7.0
+
+        def trace(self, n_tokens, wall_s):
+            return lambda t: np.full(np.shape(t), 40.0) if np.ndim(t) else 40.0
+
+    src = ModelSource(_PM())
+    assert src(0.5) == 7.0
+    assert np.all(src(np.array([0.1, 0.2])) == 7.0)
+    src.set_step(4, 1.0, t0=10.0)
+    assert float(np.asarray(src(10.5))) == 40.0
+    src.clear()
+    assert src(10.5) == 7.0
+
+
+def test_trace_source_round_trips_a_block():
+    src = MutableSource(123.0)
+    session = MonitorSession(src, probe_cfg=ProbeConfig(noise_w=0.0))
+    block = session.sample(0.05)
+    replay = TraceSource.from_block(block)
+    assert abs(replay(0.001) - 123.0) < 1e-6
+    assert np.allclose(replay(block.t), block.watts)
+    assert replay(99.0) == 0.0                     # past the recording
+
+
+# ---------------------------------------------------------------------------
+# Bus oversubscription fidelity
+
+
+def test_oversubscribed_bus_degrades_per_probe_rate():
+    mb = MainBoard()
+    n = PROBES_PER_BUS + 2                          # 8 probes on one chain
+    for i in range(n):
+        mb.attach(Probe(lambda t: 100.0, ProbeConfig(probe_id=i, noise_w=0.0)),
+                  bus=0, oversubscribe=True)
+    sps = mb.effective_sps(0)
+    assert sps == BUS_MAX_SPS / n < REPORT_SPS      # I2C budget shared
+    blocks = mb.read_block(1.0)
+    assert len(blocks) == n
+    for b in blocks.values():
+        assert b.n == round(sps)                    # degraded report count
+        # energy integrates with the stream's actual dt, not 1/REPORT_SPS
+        assert np.allclose(b.dt, 1.0 / sps)
+        assert abs(b.energy_j() - 100.0) < 0.5      # 100 W * 1 s
+    legacy = MainBoard()
+    for i in range(n):
+        legacy.attach(Probe(lambda t: 100.0,
+                            ProbeConfig(probe_id=i, noise_w=0.0)),
+                      bus=0, oversubscribe=True)
+    stream = legacy.read_samples(1.0)[0]
+    assert len(stream) == round(sps)
+    assert abs(MainBoard.energy_j(stream) - 100.0) < 0.5
+
+
+def test_single_sample_stream_integrates_actual_dt():
+    """Even a one-sample read carries the degraded stream's dt (it cannot
+    be inferred from timestamp spacing)."""
+    mb = MainBoard()
+    n = PROBES_PER_BUS + 2
+    for i in range(n):
+        mb.attach(Probe(lambda t: 100.0, ProbeConfig(probe_id=i, noise_w=0.0)),
+                  bus=0, oversubscribe=True)
+    sps = mb.effective_sps(0)
+    stream = mb.read_samples(1.0 / sps)[0]
+    assert len(stream) == 1
+    assert stream[0].dt == 1.0 / sps
+    assert abs(MainBoard.energy_j(stream) - 100.0 / sps) < 1e-6
+
+
+def test_tag_index_snapshot_survives_later_events():
+    """A compiled TagIndex is an immutable snapshot: answers don't change
+    as the bus keeps logging (even across internal buffer regrowth)."""
+    clock = _clock()
+    bus = TagBus(clock=clock)
+    bus.raise_("early")
+    clock.advance(1.0)
+    bus.lower("early")
+    snap = bus.index()
+    before = [snap.active_at(t) for t in (0.5, 1.5)]
+    for i in range(40):                         # force buffer regrowth
+        clock.advance(0.1)
+        with bus.tag(f"later_{i}"):
+            pass
+    assert [snap.active_at(t) for t in (0.5, 1.5)] == before == [("early",), ()]
+    assert bus.active_at(0.5) == ("early",)     # fresh index agrees
+
+
+def test_full_bus_still_rejects_without_oversubscribe():
+    mb = MainBoard()
+    for i in range(PROBES_PER_BUS):
+        mb.attach(Probe(lambda t: 1.0, ProbeConfig(probe_id=i)), bus=0)
+    with pytest.raises(RuntimeError):
+        mb.attach(Probe(lambda t: 1.0), bus=0)
+    assert mb.effective_sps(0) == REPORT_SPS        # six probes: full rate
