@@ -8,35 +8,76 @@ Everything runs through the unified ``repro.telemetry`` API. Old-vs-columnar
 rows time the legacy per-``Sample``-object path (``session.board``) against
 the columnar ``SampleBlock`` path on identical streams (same probe seeds ->
 bit-equal watts), assert the energy totals agree to 1e-9 J, and report the
-speedup. ``--json PATH`` dumps every row for the CI perf-trajectory
-artifact.
+speedup. The record->reload rows time the ``repro.tracestore`` ``.dkt``
+round trip (write a session's stream, mmap it back) and assert the reloaded
+columns are bit-exact. ``--json PATH`` dumps every row for the CI
+perf-trajectory artifact.
 
     PYTHONPATH=src python -m benchmarks.bench_energy_platform [--json PATH]
 """
 import argparse
-import json
+import os
+import tempfile
 
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import BenchRows, time_fn
 from repro.telemetry import (MILLIWATT, REPORT_SPS, MonitorSession,
                              MutableSource, ProbeConfig, read_vectorized)
+from repro.tracestore import TraceReader, TraceWriter
 
 READ_S = 0.5        # 12-probe read window (6000 samples/call)
 TAG_S = 2.0         # single-probe tag-attribution window (2000 samples)
 
-ROWS = {}
-
-
-def record(name, seconds, derived=""):
-    emit(name, seconds, derived)
-    ROWS[name] = {"us_per_call": seconds * 1e6, "derived": derived}
+ROWS = BenchRows()
+record = ROWS.record
 
 
 def _session(power_fn, n_probes=1):
     """Identically seeded sessions produce bit-equal streams, so the
     legacy and columnar paths can be compared head to head."""
     return MonitorSession([power_fn] * n_probes, node="bench")
+
+
+def _bench_tracestore():
+    """record -> reload: .dkt write+read round-trip overhead, bit-exact."""
+    src = MutableSource(95.0)
+    session = MonitorSession(src, node="trace-bench")
+    with session.region("step"):
+        for _ in range(10):
+            session.sample(0.1)             # 10 windows, 1000 samples
+    blocks = session.blocks()
+    n = sum(b.n for b in blocks)
+    path = os.path.join(tempfile.mkdtemp(prefix="dkt_bench_"), "bench.dkt")
+
+    def write():
+        with TraceWriter(path) as w:
+            sid = w.add_stream("bench/probe0", node="bench", sps=REPORT_SPS)
+            for b in blocks:
+                w.append(sid, b)
+        return path
+
+    t_w = time_fn(write, warmup=1, iters=5)
+    nbytes = os.path.getsize(path)
+
+    def read():
+        with TraceReader(path) as r:
+            return r.read(0).energy_j()
+
+    t_r = time_fn(read, warmup=1, iters=5)
+    with TraceReader(path) as r:
+        back = r.read(0)
+        live = session.block()
+        assert np.array_equal(live.t, back.t)
+        assert np.array_equal(live.watts, back.watts)
+        assert np.array_equal(live.bits, back.bits)
+        assert live.energy_j() == back.energy_j()
+    record("energy/trace_record", t_w,
+           f"{n / t_w:.0f}samples/s_written;{nbytes / t_w / 1e6:.0f}MB/s;"
+           f"{nbytes / n:.1f}B/sample")
+    record("energy/trace_reload", t_r,
+           f"{n / t_r:.0f}samples/s_read;roundtrip=bit_exact")
+    os.unlink(path)
 
 
 def run(json_path=None):
@@ -90,9 +131,10 @@ def run(json_path=None):
     record("energy/session_sample", t,
            f"{READ_S * REPORT_SPS / t:.0f}samples/s")
 
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(ROWS, f, indent=2, sort_keys=True)
+    # -- trace store: record -> reload round trip ---------------------------
+    _bench_tracestore()
+
+    ROWS.dump(json_path)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,16 @@
 """§Roofline report: reads the dry-run records (results/dryrun/*) and prints
 the three-term roofline per (arch x shape x mesh) + J/token from the energy
-model. This is the table EXPERIMENTS.md §Roofline embeds.
+model. This is the table EXPERIMENTS.md §Roofline embeds. ``--json PATH``
+dumps the rows for the CI perf-trajectory artifact (empty when no dry-run
+records exist — the artifact still marks the bench as having run).
+
+    PYTHONPATH=src python -m benchmarks.bench_roofline [--json PATH]
 """
+import argparse
 import json
 import pathlib
 
-from benchmarks.common import emit
+from benchmarks.common import BenchRows
 from repro.core import energy
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
@@ -23,7 +28,8 @@ def load(mesh="single"):
     return out
 
 
-def run():
+def run(json_path=None):
+    rows = BenchRows()
     for mesh in ("single", "multi"):
         for rec in load(mesh):
             rl = rec["roofline"]
@@ -36,13 +42,17 @@ def run():
             tokens = shape_tokens.get(rec["shape"], 1)
             jpt = e_step / tokens
             frac = rl["compute_s"] / max(t_step, 1e-12)
-            emit(f"roofline/{mesh}/{rec['arch']}/{rec['shape']}",
-                 t_step,
-                 f"dom={rl['dominant']};roofline_frac={frac:.3f};"
-                 f"useful={rl['useful_ratio']:.2f};"
-                 f"hbm={rec.get('hbm_per_device_gb', 0):.1f}GiB;"
-                 f"J/tok={jpt:.4g}")
+            rows.record(f"roofline/{mesh}/{rec['arch']}/{rec['shape']}",
+                        t_step,
+                        f"dom={rl['dominant']};roofline_frac={frac:.3f};"
+                        f"useful={rl['useful_ratio']:.2f};"
+                        f"hbm={rec.get('hbm_per_device_gb', 0):.1f}GiB;"
+                        f"J/tok={jpt:.4g}")
+    rows.dump(json_path)
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="dump rows as JSON (CI perf-trajectory artifact)")
+    run(ap.parse_args().json)

@@ -2,13 +2,19 @@
 
 Task chains placed across p-core/e-core classes under time vs energy vs EDP
 objectives; derived column compares against the best single-class baseline.
+``--json PATH`` dumps the rows for the CI perf-trajectory artifact.
+
+    PYTHONPATH=src python -m benchmarks.bench_scheduler [--json PATH]
 """
-from benchmarks.common import emit, time_fn
+import argparse
+
+from benchmarks.common import BenchRows, time_fn
 from repro.core import hw
 from repro.core.scheduler import HeterogeneousScheduler, ResourceClass, Task
 
 
-def run():
+def run(json_path=None):
+    rows = BenchRows()
     classes = [
         ResourceClass("p-cores", hw.RYZEN_7945HX, 4, efficiency=0.8),
         ResourceClass("e-cores", hw.RYZEN_AI_HX370, 8, efficiency=0.7),
@@ -23,13 +29,18 @@ def run():
         sched = HeterogeneousScheduler(classes, obj)
         t = time_fn(lambda: sched.schedule(tasks), warmup=0, iters=3)
         _, stats = sched.schedule(tasks)
-        base, bstats = HeterogeneousScheduler(classes[:1], "time"), None
+        base = HeterogeneousScheduler(classes[:1], "time")
         _, bstats = base.schedule(tasks)
         speedup = bstats["makespan_s"] / stats["makespan_s"]
-        emit(f"sched/{obj}", t,
-             f"makespan={stats['makespan_s']:.1f}s;"
-             f"energy={stats['energy_j']:.0f}J;vs_pcore_only={speedup:.2f}x")
+        rows.record(f"sched/{obj}", t,
+                    f"makespan={stats['makespan_s']:.1f}s;"
+                    f"energy={stats['energy_j']:.0f}J;"
+                    f"vs_pcore_only={speedup:.2f}x")
+    rows.dump(json_path)
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="dump rows as JSON (CI perf-trajectory artifact)")
+    run(ap.parse_args().json)

@@ -5,9 +5,10 @@ smoke model: the static engine runs it in sequential batch groups (every
 group decodes until its longest request finishes), the continuous engine
 recycles slots so freed capacity is refilled mid-decode. Reports decode
 tokens/s for both, the speedup (acceptance gate: >= 1.5x), and per-request
-J/token from the tag-bus energy attribution.
+J/token from the tag-bus energy attribution. ``--json PATH`` dumps the rows
+for the CI perf-trajectory artifact.
 
-    PYTHONPATH=src python benchmarks/bench_serving.py
+    PYTHONPATH=src python -m benchmarks.bench_serving [--json PATH]
 """
 import argparse
 
@@ -18,7 +19,7 @@ from repro import configs
 from repro.models import build_model
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 
-from common import emit
+from benchmarks.common import BenchRows
 
 # mixed lengths: the static engine pays max(group) steps per group, the
 # continuous engine only pays for tokens actually generated
@@ -63,7 +64,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=48)
+    ap.add_argument("--json", default=None,
+                    help="dump rows as JSON (CI perf-trajectory artifact)")
     args = ap.parse_args(argv)
+    rows = BenchRows()
 
     cfg = configs.get_smoke(args.arch)
     model = build_model(cfg, q_block=8)
@@ -79,10 +83,16 @@ def main(argv=None):
     assert all(a.output == b.output for a, b in zip(s_reqs, c_reqs)), \
         "engines disagree on generated tokens"
 
-    emit("serve_static_decode", 1.0 / s_tps if s_tps else 0.0,
-         f"{s_tps:.1f} tok/s")
-    emit("serve_continuous_decode", 1.0 / c_tps if c_tps else 0.0,
-         f"{c_tps:.1f} tok/s")
+    rows.record("serve/static_decode", 1.0 / s_tps if s_tps else 0.0,
+                f"{s_tps:.1f}tok/s")
+    rows.record("serve/continuous_decode", 1.0 / c_tps if c_tps else 0.0,
+                f"{c_tps:.1f}tok/s;speedup={speedup:.2f}x_vs_static;"
+                f"recycles={c_st['slots_recycled']}")
+    total_j = c_st.get("energy_j", 0.0)
+    rows.record("serve/continuous_energy", c_st["decode_s"],
+                f"{total_j:.2f}J_total;"
+                f"{total_j / max(c_st['tokens_decoded'], 1):.3f}J/token")
+    rows.dump(args.json)
     print(f"\nstatic    : {s_tokens:.0f} tokens in {s_dec*1e3:.0f} ms decode "
           f"({s_tps:.1f} tok/s)")
     print(f"continuous: {c_st['tokens_decoded']} tokens in "
@@ -96,9 +106,8 @@ def main(argv=None):
         print(f"  req {r.req_id:2d}: {len(r.output):2d} tokens  "
               f"{r.energy_j:7.2f} J  "
               f"{r.energy_j / max(len(r.output), 1):6.2f} J/token")
-    total = c_st.get("energy_j", 0.0)
     parts = sum(r.energy_j for r in c_reqs)
-    print(f"  board total {total:.2f} J, request sum {parts:.2f} J")
+    print(f"  board total {total_j:.2f} J, request sum {parts:.2f} J")
     return speedup
 
 

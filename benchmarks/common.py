@@ -1,4 +1,7 @@
-"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)
+and the shared ``--json`` row dump every bench feeds the CI perf-trajectory
+artifact through."""
+import json
 import time
 
 import jax
@@ -21,3 +24,20 @@ def time_fn(fn, *args, warmup=2, iters=5, **kw):
 
 def emit(name, seconds, derived=""):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+class BenchRows:
+    """Collects emitted rows so a bench can dump them as the JSON artifact
+    CI uploads per run (the ``bench_energy_platform`` pattern)."""
+
+    def __init__(self):
+        self.rows = {}
+
+    def record(self, name, seconds, derived=""):
+        emit(name, seconds, derived)
+        self.rows[name] = {"us_per_call": seconds * 1e6, "derived": derived}
+
+    def dump(self, json_path):
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(self.rows, f, indent=2, sort_keys=True)

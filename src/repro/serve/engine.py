@@ -68,6 +68,9 @@ class EngineTelemetry:
         self.source = ModelSource(power_model)
         self.session = MonitorSession(self.source, node=node)
         self.n_slot_tags = max(1, min(batch_size, N_GPIO - self.N_PHASE_TAGS))
+        # per-window event log: what replay needs to re-drive this session
+        # deterministically against a recorded trace (repro.tracestore)
+        self.events: List[Dict] = []
 
     def slot_tag(self, slot_index: int) -> str:
         return f"s{slot_index % self.n_slot_tags}"
@@ -87,6 +90,10 @@ class EngineTelemetry:
         tag_groups: Dict[str, List[Request]] = {}
         for idx, req in slot_to_req.items():
             tag_groups.setdefault(self.slot_tag(idx), []).append(req)
+        self.events.append({
+            "phase": phase, "wall_s": wall_s, "n_tokens": n_tokens,
+            "groups": {tg: [r.req_id for r in reqs]
+                       for tg, reqs in tag_groups.items()}})
         try:
             block = self.session.sample(wall_s,
                                         tags=[phase] + sorted(tag_groups))
@@ -395,3 +402,4 @@ class ContinuousEngine:
         self.slots = SlotManager(self.batch_size, self.max_seq)
         if self.tel:
             self.tel.session.reset()
+            self.tel.events = []       # event log tracks the sample stream

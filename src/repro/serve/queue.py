@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, List, Optional
+from typing import Callable, Deque, List, Optional
 
 import numpy as np
 
@@ -95,14 +95,23 @@ class AdmissionController:
        cap — admitting more requests raises utilization and therefore power.
     3. Requests whose predicted wait (queued tokens / measured decode rate)
        exceeds their TTL are shed instead of queued indefinitely.
+    4. ``max_slots_fn`` / ``should_shed_fn`` override steps 2 and 3 wholesale
+       — the injection point the trace-replay harness (``repro.tracestore``)
+       uses to regression-test policy variants against recorded power
+       without subclassing the controller.
     """
 
     def __init__(self, power_model: Optional[ServePowerModel] = None,
                  power_cap_w: Optional[float] = None,
-                 stats: Optional[ThroughputStats] = None):
+                 stats: Optional[ThroughputStats] = None,
+                 max_slots_fn: Optional[Callable[[int], int]] = None,
+                 should_shed_fn: Optional[Callable[["Request", int],
+                                                   bool]] = None):
         self.pm = power_model
         self.cap_w = power_cap_w
         self.stats = stats or ThroughputStats()
+        self.max_slots_fn = max_slots_fn
+        self.should_shed_fn = should_shed_fn
 
     def dvfs(self, batch_size: int) -> Optional[DvfsState]:
         """DVFS state sustaining the cap at full concurrency (None = f_max)."""
@@ -120,6 +129,8 @@ class AdmissionController:
 
     def max_slots(self, batch_size: int) -> int:
         """Largest concurrency whose modeled average power fits the cap."""
+        if self.max_slots_fn is not None:
+            return self.max_slots_fn(batch_size)
         if self.cap_w is None or self.pm is None:
             return batch_size
         n = 0
@@ -135,6 +146,8 @@ class AdmissionController:
         """Shed when the predicted wait for the ``tokens_ahead`` queued/active
         tokens in front of this request exceeds its TTL. A request with
         nothing ahead of it is never shed — it would start immediately."""
+        if self.should_shed_fn is not None:
+            return self.should_shed_fn(req, tokens_ahead)
         if req.ttl_s is None or tokens_ahead <= 0:
             return False
         if self.stats.rate("decode") <= 0:

@@ -18,12 +18,13 @@ from repro.core.probe import (AVG_N, MILLIWATT, RAW_SPS, REPORT_SPS,
 from repro.telemetry.samples import SampleBlock, SampleView, read_board_blocks
 from repro.telemetry.session import EnergyReport, MonitorSession, Window
 from repro.telemetry.source import (ModelSource, MutableSource, PowerSource,
-                                    TraceSource, constant)
+                                    TraceExhausted, TraceSource, constant)
 
 __all__ = [
     "MonitorSession", "Window", "EnergyReport",
     "SampleBlock", "SampleView", "read_board_blocks",
-    "PowerSource", "ModelSource", "MutableSource", "TraceSource", "constant",
+    "PowerSource", "ModelSource", "MutableSource", "TraceSource",
+    "TraceExhausted", "constant",
     # platform constants / probe config re-exported for consumers
     "ProbeConfig", "read_vectorized",
     "AVG_N", "MILLIWATT", "RAW_SPS", "REPORT_SPS",

@@ -59,19 +59,25 @@ class Window:
 
     def __init__(self, session: "MonitorSession"):
         self._session = session
-        self._start = len(session._blocks)
+        self._start = session._abs_len          # absolute block index
         self._t0 = session.cursor
         self._end: Optional[int] = None
         self._t1: Optional[float] = None
 
     def close(self):
         if self._end is None:
-            self._end = len(self._session._blocks)
+            self._end = self._session._abs_len
             self._t1 = self._session.cursor
 
     def blocks(self) -> List[SampleBlock]:
-        end = self._end if self._end is not None else len(self._session._blocks)
-        return self._session._blocks[self._start:end]
+        end = self._end if self._end is not None else self._session._abs_len
+        lo = self._start - self._session._n_dropped
+        if lo < 0:
+            raise RuntimeError(
+                "window blocks were drained/reset out of the session; "
+                "close windows before drain() or report from the drained "
+                "blocks directly")
+        return self._session._blocks[lo:end - self._session._n_dropped]
 
     def report(self, tokens: Optional[int] = None) -> EnergyReport:
         t1 = self._t1 if self._t1 is not None else self._session.cursor
@@ -84,7 +90,8 @@ class MonitorSession:
     def __init__(self, source: Union[PowerSource, Sequence[PowerSource]],
                  node: str = "node", clock_t0: float = 0.0,
                  probe_cfg: Optional[ProbeConfig] = None,
-                 grid_sps: float = REPORT_SPS):
+                 grid_sps: float = REPORT_SPS,
+                 oversubscribe: bool = False):
         sources = (list(source) if isinstance(source, (list, tuple))
                    else [source])
         if not sources:
@@ -95,11 +102,13 @@ class MonitorSession:
         base = probe_cfg or ProbeConfig()
         for i, src in enumerate(sources):
             self._board.attach(Probe(src, dataclasses.replace(
-                base, probe_id=base.probe_id + i)))
+                base, probe_id=base.probe_id + i)),
+                oversubscribe=oversubscribe)
         self._grid = float(grid_sps)
         self._cursor = float(clock_t0)
         self._origin = float(clock_t0)
         self._blocks: List[SampleBlock] = []
+        self._n_dropped = 0          # blocks removed by drain()/reset()
         self._total_j = 0.0
 
     # -- clock / board -------------------------------------------------------
@@ -108,6 +117,11 @@ class MonitorSession:
     def cursor(self) -> float:
         """Wall-time position of the session (sampling resumes here)."""
         return self._cursor
+
+    @property
+    def grid_sps(self) -> float:
+        """The report grid sampling windows are aligned to."""
+        return self._grid
 
     @property
     def board(self) -> MainBoard:
@@ -135,8 +149,18 @@ class MonitorSession:
         Extra ``tags`` are raised for just this window; longer-lived regions
         use :meth:`region`. Returns the window's (possibly empty) block,
         concatenated over probes."""
+        streams = self.sample_streams(wall_s, tags)
+        return self._blocks[-1] if streams is not None else SampleBlock.empty()
+
+    def sample_streams(self, wall_s: float,
+                       tags: Iterable[str] = ()) -> Optional[Dict[int, SampleBlock]]:
+        """Like :meth:`sample` but also returns the window's per-probe
+        blocks keyed by probe id (the export hook recorders persist streams
+        through — one ``.dkt`` stream per probe). The concatenated window
+        still lands on the session's block list, so reports are unchanged.
+        Returns None for a non-positive window."""
         if wall_s <= 0:
-            return SampleBlock.empty()
+            return None
         end = self._cursor + wall_s
         read_s = (round(end * self._grid)
                   - round(self._cursor * self._grid)) / self._grid
@@ -154,7 +178,7 @@ class MonitorSession:
         block = SampleBlock.concat(list(streams.values()))
         self._blocks.append(block)
         self._total_j += block.energy_j()
-        return block
+        return streams
 
     # -- windows / reports ---------------------------------------------------
 
@@ -173,6 +197,30 @@ class MonitorSession:
     def block(self) -> SampleBlock:
         """All samples so far as one block."""
         return SampleBlock.concat(self._blocks)
+
+    @property
+    def _abs_len(self) -> int:
+        """Blocks sampled over the session lifetime (drained or not);
+        windows anchor on this so a drain can't silently shift them."""
+        return self._n_dropped + len(self._blocks)
+
+    def drain(self) -> List[SampleBlock]:
+        """Pop the accumulated blocks (recorder flush hook): returns every
+        block sampled since the last drain and clears the in-memory list so
+        long recordings don't grow without bound. The clock cursor and the
+        O(1) :meth:`energy_j` running total keep going; :meth:`report`
+        afterwards only covers still-undrained blocks, and a ``Window``
+        opened before the drain raises rather than reporting wrong energy."""
+        out, self._blocks = self._blocks, []
+        self._n_dropped += len(out)
+        return out
+
+    def probe_rows(self) -> List[tuple]:
+        """(probe_id, bus, power_source, effective_sps, volts_nominal) per
+        probe, in the board's stream order — the key recorders use to tie
+        per-probe sample streams back to their power sources."""
+        return [(pid, bus, probe.power_fn, sps, probe.cfg.volts_nominal)
+                for pid, bus, probe, sps in self._board.probes()]
 
     def _report_over(self, blocks: List[SampleBlock], duration_s: float,
                      tokens: Optional[int] = None) -> EnergyReport:
@@ -205,6 +253,7 @@ class MonitorSession:
     def reset(self):
         """Drop accumulated samples (benchmark warmup); the board clock and
         tag bus keep running."""
+        self._n_dropped += len(self._blocks)
         self._blocks = []
         self._origin = self._cursor
         self._total_j = 0.0

@@ -11,10 +11,17 @@ model. Three standard sources cover every consumer in the repo:
                    once per step from the utilization model (replaces the
                    old closure-over-``self._power_w`` lambda);
 ``TraceSource``    replays recorded ``(t, watts)`` arrays (zero-order hold),
-                   e.g. a previously captured ``SampleBlock``.
+                   e.g. a previously captured ``SampleBlock`` or a
+                   ``repro.tracestore`` stream.
 
 All three evaluate on whole numpy timestamp arrays, which is what lets the
 columnar probe path vectorize end to end.
+
+Sampling a ``TraceSource`` past the end of its recording raises
+:class:`TraceExhausted` by default — a replay that silently flat-lines
+after the data runs out corrupts every downstream energy number. Pass
+``on_exhausted="loop"`` to wrap around explicitly, ``"hold"`` to
+zero-order-hold the final report, or ``"fill"`` to fall back to ``fill_w``.
 """
 from __future__ import annotations
 
@@ -23,6 +30,10 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.energy import ServePowerModel
+
+
+class TraceExhausted(RuntimeError):
+    """A ``TraceSource`` was sampled past the end of its recording."""
 
 
 @runtime_checkable
@@ -80,27 +91,64 @@ class ModelSource:
 
 class TraceSource:
     """Replay of a recorded power trace (zero-order hold: the report at
-    ``t_i`` is the average power over ``(t_{i-1}, t_i]``)."""
+    ``t_i`` is the average power over ``(t_{i-1}, t_i]``).
+
+    ``on_exhausted`` picks the out-of-range behavior for times past the
+    final report:
+
+    ``"raise"``  (default) raise :class:`TraceExhausted` — replays must not
+                 silently extrapolate energy that was never recorded;
+    ``"loop"``   wrap modulo the final timestamp (the trace is treated as
+                 one period anchored at t=0, e.g. a steady-state profile);
+    ``"hold"``   zero-order-hold the final report forever;
+    ``"fill"``   report ``fill_w`` past the end.
+    """
+
+    MODES = ("raise", "loop", "hold", "fill")
 
     def __init__(self, t: np.ndarray, watts: np.ndarray,
-                 fill_w: float = 0.0):
+                 fill_w: float = 0.0, on_exhausted: str = "raise"):
+        if on_exhausted not in self.MODES:
+            raise ValueError(f"on_exhausted={on_exhausted!r} "
+                             f"(expected one of {self.MODES})")
         t = np.asarray(t, np.float64)
         order = np.argsort(t, kind="stable")
         self._t = t[order]
         self._w = np.asarray(watts, np.float64)[order]
         self._fill = float(fill_w)
+        self._mode = on_exhausted
 
     @classmethod
-    def from_block(cls, block, fill_w: float = 0.0) -> "TraceSource":
-        return cls(block.t, block.watts, fill_w)
+    def from_block(cls, block, fill_w: float = 0.0,
+                   on_exhausted: str = "raise") -> "TraceSource":
+        return cls(block.t, block.watts, fill_w, on_exhausted)
+
+    @property
+    def t_end(self) -> float:
+        """Timestamp of the final report (0.0 for an empty trace)."""
+        return float(self._t[-1]) if self._t.shape[0] else 0.0
+
+    def __len__(self) -> int:
+        return int(self._t.shape[0])
 
     def __call__(self, t):
         if self._t.shape[0] == 0:
+            if self._mode == "raise":
+                raise TraceExhausted("TraceSource has no recorded samples")
             return np.full(np.shape(t), self._fill) if np.ndim(t) else self._fill
-        idx = np.searchsorted(self._t, t, side="left")
+        t_arr = np.asarray(t, np.float64)
+        end = self._t[-1]
+        if self._mode == "raise" and np.any(t_arr > end):
+            raise TraceExhausted(
+                f"sampled t={float(np.max(t_arr)):.6f}s past the recording "
+                f"end ({float(end):.6f}s); pass on_exhausted='loop' to wrap "
+                f"or 'hold'/'fill' to extrapolate explicitly")
+        if self._mode == "loop" and end > 0:
+            t_arr = np.where(t_arr > end, np.mod(t_arr, end), t_arr)
+        idx = np.searchsorted(self._t, t_arr, side="left")
         out = self._w[np.clip(idx, 0, self._w.shape[0] - 1)]
-        past_end = idx >= self._t.shape[0]
-        out = np.where(past_end, self._fill, out)
+        if self._mode == "fill":
+            out = np.where(idx >= self._t.shape[0], self._fill, out)
         return out if np.ndim(t) else float(out)
 
 
@@ -110,4 +158,4 @@ def constant(watts: float) -> MutableSource:
 
 
 __all__ = ["PowerSource", "MutableSource", "ModelSource", "TraceSource",
-           "constant", "ServePowerModel"]
+           "TraceExhausted", "constant", "ServePowerModel"]

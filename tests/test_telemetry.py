@@ -9,7 +9,8 @@ from repro.core.mainboard import BUS_MAX_SPS, MainBoard, PROBES_PER_BUS
 from repro.core.probe import REPORT_SPS, Probe, ProbeConfig
 from repro.core.tags import N_GPIO, TagBus
 from repro.telemetry import (EnergyReport, ModelSource, MonitorSession,
-                             MutableSource, SampleBlock, TraceSource)
+                             MutableSource, SampleBlock, TraceExhausted,
+                             TraceSource)
 
 
 def _clock():
@@ -273,7 +274,27 @@ def test_trace_source_round_trips_a_block():
     replay = TraceSource.from_block(block)
     assert abs(replay(0.001) - 123.0) < 1e-6
     assert np.allclose(replay(block.t), block.watts)
-    assert replay(99.0) == 0.0                     # past the recording
+    with pytest.raises(TraceExhausted):            # past the recording
+        replay(99.0)
+
+
+def test_trace_source_exhaustion_modes():
+    t = np.array([0.1, 0.2, 0.3])
+    w = np.array([10.0, 20.0, 30.0])
+    with pytest.raises(TraceExhausted):
+        TraceSource(t, w)(0.31)
+    with pytest.raises(TraceExhausted):            # any element past the end
+        TraceSource(t, w)(np.array([0.05, 0.5]))
+    assert TraceSource(t, w)(0.3) == 30.0          # the end itself is in range
+    assert TraceSource(t, w, on_exhausted="hold")(99.0) == 30.0
+    assert TraceSource(t, w, fill_w=7.0, on_exhausted="fill")(99.0) == 7.0
+    # loop wraps modulo the final timestamp (trace anchored at t=0)
+    looped = TraceSource(t, w, on_exhausted="loop")
+    assert looped(0.3 + 0.15) == looped(0.15) == 20.0
+    with pytest.raises(TraceExhausted):            # empty trace: nothing to replay
+        TraceSource(np.zeros(0), np.zeros(0))(0.0)
+    with pytest.raises(ValueError):
+        TraceSource(t, w, on_exhausted="banana")
 
 
 # ---------------------------------------------------------------------------

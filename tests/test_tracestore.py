@@ -1,0 +1,312 @@
+"""Trace store (`repro.tracestore`): .dkt round-trip fidelity (property:
+SampleBlock -> file -> SampleBlock bit-exact, including empty blocks and
+recycled >8-tag channels), time-indexed reads, deterministic replay
+(same trace -> identical ReplayReport twice), and live-run attribution
+reproduction (replayed per-request joules == live engine's, the paper's
+"regression-test policies against recorded power" workflow)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:         # container without the test extra: the seeded
+    HAVE_HYPOTHESIS = False  # fallback below still covers the round trip
+
+from repro.cluster.topology import dalek_topology
+from repro.core.probe import ProbeConfig
+from repro.core.scheduler import ThroughputStats
+from repro.serve.queue import AdmissionController
+from repro.telemetry import MonitorSession, MutableSource, SampleBlock
+from repro.tracestore import (ClusterRecorder, ReplayRequest, TraceFormatError,
+                              TraceReader, TraceWriter, replay, replay_policy)
+
+
+def assert_block_equal(a: SampleBlock, b: SampleBlock):
+    for field in ("t", "volts", "watts", "dt"):
+        va, vb = getattr(a, field), getattr(b, field)
+        assert va.dtype == vb.dtype == np.float64
+        assert np.array_equal(va, vb), field
+    assert np.array_equal(a.bits, b.bits)
+    assert b.bits.dtype == np.uint8
+    assert np.array_equal(a.seg_bounds, b.seg_bounds)
+    assert a.seg_maps == b.seg_maps
+    assert a.n_avg == b.n_avg
+
+
+# ---------------------------------------------------------------------------
+# format round trip
+
+
+def random_block(rng: np.random.Generator, n: int) -> SampleBlock:
+    """Random block: empty when n=0, and more distinct tag names than the
+    8 GPIO lines (recycled channels: the same line maps to different names
+    in different segments)."""
+    if n == 0:
+        return SampleBlock.empty()
+    t = np.sort(rng.uniform(0.0, 10.0, n))
+    k = int(rng.integers(1, min(n, 5) + 1))
+    cuts = sorted({0, n, *map(int, rng.integers(1, n, k - 1))}) if n > 1 \
+        else [0, n]
+    names = [f"region_{i}" for i in range(12)]       # 12 names, 8 lines
+    maps = tuple(
+        {int(line): names[int(rng.integers(0, len(names)))]
+         for line in rng.choice(8, size=int(rng.integers(0, 5)),
+                                replace=False)}
+        for _ in range(len(cuts) - 1))
+    return SampleBlock(
+        t=t, volts=np.full(n, 20.0),
+        watts=rng.uniform(0.0, 240.0, n),
+        dt=np.full(n, 1e-3),
+        bits=rng.integers(0, 256, n).astype(np.uint8),
+        seg_bounds=np.asarray(cuts, np.int64), seg_maps=maps)
+
+
+def _round_trip(path, rng, ns, n_streams):
+    blocks = [random_block(rng, n) for n in ns]
+    assign = [int(rng.integers(0, n_streams)) for _ in blocks]
+    with TraceWriter(path) as w:
+        sids = [w.add_stream(f"s{i}", node=f"n{i}", sps=1000.0)
+                for i in range(n_streams)]
+        for sid_i, block in zip(assign, blocks):
+            w.append(sids[sid_i], block)
+    with TraceReader(path) as r:
+        per_stream = {sid: list(r.blocks(sid)) for sid in sids}
+    for sid_i, block in zip(assign, blocks):
+        assert_block_equal(block, per_stream[sids[sid_i]].pop(0))
+    assert all(not rest for rest in per_stream.values())
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           ns=st.lists(st.integers(0, 40), min_size=1, max_size=4),
+           n_streams=st.integers(1, 2))
+    def test_dkt_round_trip_bit_exact(tmp_path_factory, seed, ns, n_streams):
+        path = tmp_path_factory.mktemp("dkt") / "roundtrip.dkt"
+        _round_trip(path, np.random.default_rng(seed), ns, n_streams)
+
+
+def test_dkt_round_trip_bit_exact_seeded(tmp_path):
+    """Seeded sweep of the same property (runs without hypothesis), pinning
+    the empty-block and single-sample edge cases."""
+    rng = np.random.default_rng(7)
+    cases = [[0], [1], [0, 0], [40, 0, 13]]
+    cases += [[int(n) for n in rng.integers(0, 40, 3)] for _ in range(10)]
+    for case, ns in enumerate(cases):
+        _round_trip(tmp_path / f"rt{case}.dkt", rng, ns,
+                    n_streams=1 + case % 2)
+
+
+def test_dkt_round_trips_recycled_session_channels(tmp_path):
+    """End-to-end: a session that cycles through 3x the GPIO line budget
+    round-trips with every segment map (and thus every resolved tag) intact."""
+    src = MutableSource(42.0)
+    session = MonitorSession(src, probe_cfg=ProbeConfig(noise_w=0.0))
+    for i in range(24):                        # 24 distinct names, 8 lines
+        with session.region(f"phase_{i}"):
+            session.sample(0.004)
+    live = session.block()
+    path = tmp_path / "recycled.dkt"
+    with TraceWriter(path) as w:
+        sid = w.add_stream("n/p0")
+        for b in session.blocks():
+            w.append(sid, b)
+    with TraceReader(path) as r:
+        back = r.read(sid)
+        assert len(r.tags) == 24
+    assert_block_equal(live, back)
+    assert live.energy_by_tag() == back.energy_by_tag()
+    # the lazy Sample view resolves identical string tuples
+    assert [s.tags for s in back.samples()] == [s.tags for s in live.samples()]
+
+
+def test_reader_time_seek_and_trim(tmp_path):
+    src = MutableSource(100.0)
+    session = MonitorSession(src, probe_cfg=ProbeConfig(noise_w=0.0))
+    for _ in range(10):
+        session.sample(0.05)                   # 10 chunks, 50 ms each
+    path = tmp_path / "seek.dkt"
+    with TraceWriter(path) as w:
+        sid = w.add_stream("n/p0")
+        for b in session.blocks():
+            w.append(sid, b)
+    with TraceReader(path) as r:
+        assert r.n_samples(sid) == 500
+        # seek lands on the chunk covering t (footer index only)
+        k = r.seek(sid, 0.26)
+        assert r.chunks(sid)[k].t0 <= 0.26 <= r.chunks(sid)[k].t1
+        full = r.read(sid)
+        part = r.read(sid, t0=0.101, t1=0.3)
+        expected = int(((full.t >= 0.101) & (full.t <= 0.3)).sum())
+        assert part.n == expected and 198 <= expected <= 201
+        assert part.t[0] >= 0.101 and part.t[-1] <= 0.3
+        assert part.energy_j() == pytest.approx(100.0 * 0.2, rel=2e-2)
+
+
+def test_empty_chunk_between_windows_keeps_seek_sorted(tmp_path):
+    """An empty window (sub-grid sample) records t0=t1=0.0; the seek index
+    must stay sorted so reads after it don't silently drop samples."""
+    src = MutableSource(100.0)
+    session = MonitorSession(src, probe_cfg=ProbeConfig(noise_w=0.0))
+    session.sample(0.05)
+    session.sample(0.0004)                     # sub-grid: empty block
+    session.sample(0.05)
+    assert [b.n for b in session.blocks()] == [50, 0, 50]
+    path = tmp_path / "gap.dkt"
+    with TraceWriter(path) as w:
+        sid = w.add_stream("n/p0")
+        for b in session.blocks():
+            w.append(sid, b)
+    with TraceReader(path) as r:
+        part = r.read(sid, t0=0.04)
+        full = r.read(sid)
+        assert part.n == int((full.t >= 0.04).sum())   # nothing dropped
+        assert r.seek(sid, 0.045) == 0
+
+
+def test_window_spanning_drain_raises():
+    src = MutableSource(10.0)
+    session = MonitorSession(src, probe_cfg=ProbeConfig(noise_w=0.0))
+    session.sample(0.01)
+    with pytest.raises(RuntimeError, match="drained"):
+        with session.window() as w:
+            session.sample(0.01)
+            session.drain()                    # recorder flush mid-window
+            session.sample(0.01)
+            w.report()
+    # windows opened after the drain work normally
+    with session.window() as w:
+        session.sample(0.02)
+    assert w.report().n_samples == 20
+
+
+def test_reader_rejects_garbage(tmp_path):
+    bad = tmp_path / "bad.dkt"
+    bad.write_bytes(b"not a trace at all")
+    with pytest.raises(TraceFormatError):
+        TraceReader(bad)
+    trunc = tmp_path / "trunc.dkt"
+    with TraceWriter(trunc) as w:
+        sid = w.add_stream("s")
+        w.append(sid, SampleBlock.empty())
+    data = trunc.read_bytes()
+    trunc.write_bytes(data[:-3])               # clip the trailer
+    with pytest.raises(TraceFormatError):
+        TraceReader(trunc)
+
+
+# ---------------------------------------------------------------------------
+# recording + deterministic replay
+
+
+@pytest.fixture(scope="module")
+def recorded_trace(tmp_path_factory):
+    """A short 2-node recording off the paper topology (one probe per chip,
+    shared clock, deterministic synthetic power)."""
+    topo = dalek_topology()
+    nodes = ["az5-a890m-0", "az5-a890m-1"]
+    path = tmp_path_factory.mktemp("trace") / "cluster.dkt"
+    with ClusterRecorder(topo, path, nodes=nodes) as rec:
+        for step in range(8):
+            t = rec.cursor
+            for j, name in enumerate(nodes):
+                node = topo.nodes[name]
+                u = 0.5 + 0.5 * np.sin(5.0 * t + j)
+                rec.set_power(name, [d.idle_w + (d.tdp_w - d.idle_w) * u
+                                     for d in node.spec.devices])
+            rec.sample(0.05)
+    return path, topo, nodes
+
+
+def test_cluster_recorder_streams(recorded_trace):
+    path, topo, nodes = recorded_trace
+    with TraceReader(path) as r:
+        assert [s["node"] for s in r.streams] == \
+            [n for n in nodes for _ in topo.nodes[n].spec.devices]
+        for s in r.streams:
+            assert s["sps"] == 1000.0          # 2 chips/node: no I2C degrade
+            assert r.n_samples(s["id"]) == 400  # 8 windows x 50 ms x 1 kHz
+        assert r.meta["kind"] == "cluster"
+        assert r.meta["duration_s"] == pytest.approx(0.4)
+
+
+def test_replay_policy_deterministic(recorded_trace):
+    path, _, _ = recorded_trace
+    wl = [ReplayRequest(i, max_new_tokens=8, ttl_s=0.1, arrival_s=0.02 * i)
+          for i in range(6)]
+    policies = lambda: {                               # noqa: E731
+        "baseline": None,
+        "strict": AdmissionController(stats=ThroughputStats(),
+                                      max_slots_fn=lambda b: 1)}
+    a = replay(path, workload=wl, policies=policies(), batch_size=2,
+               step_s=0.01)
+    b = replay(path, workload=wl, policies=policies(), batch_size=2,
+               step_s=0.01)
+    assert a == b                      # same trace -> identical ReplayReport
+    assert a.result("baseline").tokens > 0
+    assert a.result("baseline").attributed_j > 0
+    # the strict policy admits less -> sheds more under TTL pressure
+    d = a.deltas("baseline", "strict")
+    assert d["shed"] >= 0
+    # injectable max_slots hook actually constrained concurrency
+    assert a.result("strict").completed <= a.result("baseline").completed
+
+
+def test_replay_policy_energy_conserved(recorded_trace):
+    """Attributed joules never exceed the recorded trace energy, and with a
+    work-conserving policy the active-window share adds up exactly."""
+    path, _, _ = recorded_trace
+    wl = [ReplayRequest(i, max_new_tokens=4) for i in range(4)]
+    with TraceReader(path) as r:
+        res = replay_policy(r, wl, batch_size=4, step_s=0.01)
+        total = sum(r.read(s["id"]).energy_j() for s in r.streams)
+    assert res.attributed_j <= total + 1e-9
+    assert res.attributed_j == pytest.approx(
+        sum(j for _, j in res.per_request_j))
+
+
+def test_replay_cluster_jobs_debit_recorded_power(recorded_trace):
+    path, topo, nodes = recorded_trace
+    rep = replay(path, topo=topo,
+                 cluster_jobs=[{"user": "u1", "partition": "az5-a890m",
+                                "n_nodes": 2, "duration_s": 0.2,
+                                "submit_s": 0.0}])
+    assert len(rep.cluster_jobs) == 1
+    job = rep.cluster_jobs[0]
+    assert job.state == "DONE"
+    assert job.energy_j > 0            # measured joules, not TDP guesses
+
+
+# ---------------------------------------------------------------------------
+# live engine -> record -> replay attribution (the acceptance bar)
+
+
+def test_engine_attribution_replays_exactly(tmp_path):
+    jax = pytest.importorskip("jax")
+    from repro import configs
+    from repro.models import build_model
+    from repro.serve.engine import ContinuousEngine, Request
+    from repro.tracestore import record_engine, replay_attribution
+
+    cfg = configs.get_smoke("granite-20b")
+    model = build_model(cfg, q_block=8)
+    params, _ = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=3 + (i % 3) * 3) for i in range(5)]
+    eng = ContinuousEngine(model, params, batch_size=3, max_seq=48)
+    eng.serve(reqs)
+
+    path = tmp_path / "serve.dkt"
+    record_engine(eng.tel, path)
+    with TraceReader(path) as r:
+        replayed = replay_attribution(r)
+    with TraceReader(path) as r:
+        replayed_again = replay_attribution(r)
+
+    live = {req.req_id: req.energy_j for req in reqs}
+    assert set(replayed) == {rid for rid, j in live.items() if j > 0}
+    for rid, j in replayed.items():
+        assert abs(j - live[rid]) < 1e-6          # acceptance: within 1e-6 J
+    assert replayed == replayed_again              # deterministic replay
