@@ -5,12 +5,21 @@ smoke model: the static engine runs it in sequential batch groups (every
 group decodes until its longest request finishes), the continuous engine
 recycles slots so freed capacity is refilled mid-decode. Reports decode
 tokens/s for both, the speedup (acceptance gate: >= 1.5x), and per-request
-J/token from the tag-bus energy attribution. ``--json PATH`` dumps the rows
-for the CI perf-trajectory artifact.
+J/token from the tag-bus energy attribution.
+
+A second, production-shaped scenario serves prompts of N *distinct* lengths
+through the continuous engine with prefill bucketing off vs on: exact-length
+prefill compiles one executable per length (the retrace explosion), bucketed
+prefill is bounded by the bucket count. Reports end-to-end tokens/s for both
+(acceptance gate: >= 2x from bucketing), the compile counts, and asserts the
+generated tokens are identical. ``--json PATH`` dumps the rows for the CI
+perf-trajectory artifact; the ``compiles`` fields are what the cross-run
+regression gate (``benchmarks.regression_gate``) pins.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--json PATH]
 """
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -57,6 +66,33 @@ def run_continuous(model, params, cfg, args):
     return reqs, st
 
 
+def make_mixed_requests(cfg, lengths, max_new, seed=0):
+    """One request per entry of ``lengths`` — every prompt a distinct
+    length, the production traffic shape that retraces exact-length
+    prefill once per request."""
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lengths)]
+
+
+def run_mixed(model, params, cfg, args, buckets):
+    eng = ContinuousEngine(model, params, batch_size=args.batch,
+                           max_seq=args.mixed_max_seq,
+                           prefill_buckets=buckets)
+    # warm only the decode path (fixed [B,1] shape) + one prefill length;
+    # the point of the scenario is cold prefill on unseen lengths
+    eng.serve(make_mixed_requests(cfg, [args.mixed_min_len] * args.batch,
+                                  args.mixed_max_new, seed=99))
+    eng.reset_metrics()
+    lengths = [args.mixed_min_len + i for i in range(args.mixed_lengths)]
+    reqs = make_mixed_requests(cfg, lengths, args.mixed_max_new)
+    t0 = time.perf_counter()
+    st = eng.serve(reqs)
+    st["wall_s"] = time.perf_counter() - t0
+    return reqs, st
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-20b")
@@ -64,6 +100,11 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=48)
+    ap.add_argument("--mixed-lengths", type=int, default=32,
+                    help="distinct prompt lengths in the retrace scenario")
+    ap.add_argument("--mixed-min-len", type=int, default=4)
+    ap.add_argument("--mixed-max-new", type=int, default=4)
+    ap.add_argument("--mixed-max-seq", type=int, default=64)
     ap.add_argument("--json", default=None,
                     help="dump rows as JSON (CI perf-trajectory artifact)")
     args = ap.parse_args(argv)
@@ -92,6 +133,33 @@ def main(argv=None):
     rows.record("serve/continuous_energy", c_st["decode_s"],
                 f"{total_j:.2f}J_total;"
                 f"{total_j / max(c_st['tokens_decoded'], 1):.3f}J/token")
+
+    # -- retrace scenario: N distinct prompt lengths, bucketing off vs on --
+    u_reqs, u_st = run_mixed(model, params, cfg, args, buckets="off")
+    b_reqs, b_st = run_mixed(model, params, cfg, args, buckets="auto")
+    assert all(a.output == b.output for a, b in zip(u_reqs, b_reqs)), \
+        "bucketed prefill changed generated tokens"
+
+    def _e2e_tps(st):
+        # wall time, not prefill_s+decode_s: the retrace cost shows up
+        # partly as host-loop overhead between steps
+        return st["tokens_decoded"] / st["wall_s"] if st["wall_s"] else 0.0
+
+    u_tps, b_tps = _e2e_tps(u_st), _e2e_tps(b_st)
+    bucket_speedup = b_tps / u_tps if u_tps else float("inf")
+    rows.record("serve/mixed_unbucketed", u_st["wall_s"],
+                f"{u_tps:.1f}tok/s_e2e;lengths={args.mixed_lengths}",
+                compiles=u_st["prefill_compiles"])
+    rows.record("serve/mixed_bucketed", b_st["wall_s"],
+                f"{b_tps:.1f}tok/s_e2e;speedup={bucket_speedup:.2f}x;"
+                f"buckets={b_st['prefill_buckets']}",
+                compiles=b_st["prefill_compiles"])
+    # the regression-gated metric: bucketed prefill executables must never
+    # grow across runs (a retrace reintroduced anywhere fails the gate)
+    rows.record("serve/prefill_compiles", b_st["prefill_s"],
+                f"compiles={b_st['prefill_compiles']};"
+                f"unbucketed={u_st['prefill_compiles']}",
+                compiles=b_st["prefill_compiles"])
     rows.dump(args.json)
     print(f"\nstatic    : {s_tokens:.0f} tokens in {s_dec*1e3:.0f} ms decode "
           f"({s_tps:.1f} tok/s)")
@@ -101,6 +169,13 @@ def main(argv=None):
           f"peak {c_st['peak_active']} active")
     print(f"speedup   : {speedup:.2f}x "
           f"({'PASS' if speedup >= 1.5 else 'FAIL'} >= 1.5x gate)")
+    print(f"\nretrace scenario ({args.mixed_lengths} distinct prompt lengths):")
+    print(f"  unbucketed: {u_st['prefill_compiles']} prefill compiles, "
+          f"{u_tps:.1f} tok/s end-to-end")
+    print(f"  bucketed  : {b_st['prefill_compiles']} prefill compiles "
+          f"(buckets={b_st['prefill_buckets']}), {b_tps:.1f} tok/s end-to-end")
+    print(f"  bucketing speedup: {bucket_speedup:.2f}x "
+          f"({'PASS' if bucket_speedup >= 2.0 else 'FAIL'} >= 2x gate)")
     print("\nper-request energy (tag-bus attribution):")
     for r in c_reqs:
         print(f"  req {r.req_id:2d}: {len(r.output):2d} tokens  "

@@ -28,14 +28,20 @@ def emit(name, seconds, derived=""):
 
 class BenchRows:
     """Collects emitted rows so a bench can dump them as the JSON artifact
-    CI uploads per run (the ``bench_energy_platform`` pattern)."""
+    CI uploads per run (the ``bench_energy_platform`` pattern).
+
+    Extra keyword fields ride along in the JSON row — the cross-run
+    regression gate (``benchmarks.regression_gate``) reads ``compiles``
+    (jit executable counts, gated at zero increase) next to ``us_per_call``
+    (gated at a relative slowdown threshold)."""
 
     def __init__(self):
         self.rows = {}
 
-    def record(self, name, seconds, derived=""):
+    def record(self, name, seconds, derived="", **extra):
         emit(name, seconds, derived)
-        self.rows[name] = {"us_per_call": seconds * 1e6, "derived": derived}
+        self.rows[name] = {"us_per_call": seconds * 1e6, "derived": derived,
+                           **extra}
 
     def dump(self, json_path):
         if json_path:

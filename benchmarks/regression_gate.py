@@ -1,0 +1,118 @@
+"""Cross-run bench regression gate.
+
+Diffs the current run's ``--json`` bench rows against the previous run's
+uploaded artifact and fails (exit 1) on:
+
+- a relative slowdown beyond ``--threshold`` (default 15%) on any row's
+  ``us_per_call``, or
+- ANY increase in a row's ``compiles`` field — compile counts are a serving
+  invariant (prefill executables are bounded by the bucket count), so a
+  single new executable means some change reintroduced a retrace and is
+  silently burning watts on XLA compilation instead of tokens.
+
+Rows carrying a ``compiles`` field are *only* gated on the compile count:
+their wall time is cold-compile-dominated by design, which swings well past
+any reasonable threshold across differently-provisioned CI runners with
+zero code change. The deterministic count is the signal; the time is noise.
+
+Rows present only in one file are reported but never fail the gate (new
+benches must be able to land; deleted benches must not wedge CI forever).
+
+    python -m benchmarks.regression_gate PREV.json CURRENT.json
+    python -m benchmarks.regression_gate --prev-dir prev/ --cur-dir . \
+        [--threshold 0.15] [--pattern "BENCH_*.json"]
+
+Directory mode pairs files by basename, so one invocation gates every
+artifact the CI perf-trajectory job uploads (serving, energy platform,
+scheduler, roofline).
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+# rows cheaper than this are timer noise on shared CI runners; the compile
+# gate still applies to them, only the slowdown check is skipped
+MIN_GATED_US = 50.0
+
+
+def load_rows(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def diff_rows(name, prev, cur, threshold):
+    """Compare one artifact's row dicts; returns a list of failure strings."""
+    failures = []
+    common = sorted(set(prev) & set(cur))
+    for row in common:
+        p, c = prev[row], cur[row]
+        compile_row = "compiles" in p or "compiles" in c
+        p_us, c_us = p.get("us_per_call", 0.0), c.get("us_per_call", 0.0)
+        if (not compile_row and p_us >= MIN_GATED_US
+                and c_us > p_us * (1.0 + threshold)):
+            failures.append(
+                f"{name}:{row}: {p_us:.1f}us -> {c_us:.1f}us "
+                f"(+{(c_us / p_us - 1.0) * 100:.1f}% > "
+                f"{threshold * 100:.0f}% threshold)")
+        p_comp, c_comp = p.get("compiles"), c.get("compiles")
+        if p_comp is not None and c_comp is not None and c_comp > p_comp:
+            failures.append(
+                f"{name}:{row}: compile count regressed "
+                f"{p_comp} -> {c_comp} (any increase fails: a retrace "
+                f"was reintroduced)")
+    for row in sorted(set(cur) - set(prev)):
+        print(f"  [new row, not gated] {name}:{row}")
+    for row in sorted(set(prev) - set(cur)):
+        print(f"  [row disappeared, not gated] {name}:{row}")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="PREV.json CURRENT.json (file mode)")
+    ap.add_argument("--prev-dir", default=None)
+    ap.add_argument("--cur-dir", default=None)
+    ap.add_argument("--pattern", default="BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max relative us_per_call slowdown (0.15 = 15%%)")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.prev_dir and args.cur_dir:
+        cur_files = sorted(glob.glob(os.path.join(args.cur_dir, args.pattern)))
+        if not cur_files:
+            print(f"no artifacts matching {args.pattern} in {args.cur_dir}")
+            return 1
+        for cur in cur_files:
+            base = os.path.basename(cur)
+            prev = os.path.join(args.prev_dir, base)
+            if os.path.exists(prev):
+                pairs.append((base, prev, cur))
+            else:
+                print(f"  [no previous artifact, not gated] {base}")
+    elif len(args.files) == 2:
+        pairs.append((os.path.basename(args.files[1]), *args.files))
+    else:
+        ap.error("pass PREV.json CURRENT.json or --prev-dir/--cur-dir")
+
+    failures = []
+    for name, prev, cur in pairs:
+        print(f"gate: {prev} vs {cur}")
+        failures += diff_rows(name, load_rows(prev), load_rows(cur),
+                              args.threshold)
+
+    if failures:
+        print(f"\nREGRESSION GATE FAILED ({len(failures)}):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"\nregression gate passed ({len(pairs)} artifact(s), "
+          f"threshold {args.threshold * 100:.0f}%, compile counts pinned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

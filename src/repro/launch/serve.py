@@ -33,7 +33,15 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--power-cap", type=float, default=None,
                     help="node power cap in W (continuous engine only)")
+    ap.add_argument("--prefill-buckets", default="auto",
+                    help="prompt-length bucketing: 'auto' (power-of-two "
+                         "edges, bounded prefill compiles), 'off' (exact "
+                         "lengths, one executable per distinct length), or "
+                         "explicit comma-separated edges like '8,16,32'")
     args = ap.parse_args(argv)
+    buckets = (args.prefill_buckets
+               if args.prefill_buckets in ("auto", "off")
+               else [int(b) for b in args.prefill_buckets.split(",")])
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     model = build_model(cfg, q_block=min(64, args.prompt_len))
@@ -46,27 +54,34 @@ def main(argv=None):
 
     if args.engine == "static":
         engine = ServeEngine(model, params, batch_size=args.batch,
-                             max_seq=args.max_seq)
+                             max_seq=args.max_seq, prefill_buckets=buckets)
         stats = {}
         for i in range(0, len(reqs), args.batch):
             group = engine.serve(reqs[i:i + args.batch])
             for k, v in group.items():
-                if isinstance(v, (int, float)):
+                # compile counts are engine-lifetime cumulative, not per-call
+                if isinstance(v, (int, float)) and not k.endswith("_compiles"):
                     stats[k] = stats.get(k, 0.0) + v
         stats["decode_tok_per_s"] = (stats["tokens_decoded"] /
                                      stats["decode_s"] if stats.get("decode_s")
                                      else 0.0)
         stats["energy_by_tag"] = dict(engine.tel.session.report().by_tag)
+        stats["prefill_compiles"] = engine.trace_stats.compiles("prefill")
+        stats["decode_compiles"] = engine.trace_stats.compiles("decode")
     else:
         engine = ContinuousEngine(model, params, batch_size=args.batch,
                                   max_seq=args.max_seq,
-                                  power_cap_w=args.power_cap)
+                                  power_cap_w=args.power_cap,
+                                  prefill_buckets=buckets)
         stats = engine.serve(reqs)
 
     print(f"arch={cfg.name} engine={args.engine} reqs={args.requests} "
           f"prefill={stats['prefill_s']*1e3:.0f}ms "
           f"decode={stats['decode_s']*1e3:.0f}ms "
           f"({stats['decode_tok_per_s']:.1f} tok/s)")
+    print(f"compiles: prefill={stats['prefill_compiles']} "
+          f"decode={stats['decode_compiles']} "
+          f"buckets={list(engine.buckets) if engine.buckets else 'off'}")
     if engine.tel is not None:
         # full-session telemetry report from the unified API
         rep = engine.tel.session.report(tokens=stats.get("tokens_decoded"))

@@ -363,6 +363,29 @@ def reset_cache_slot(caches, slot, batch_axis=1):
     return jax.tree.map(_zero, caches)
 
 
+def mask_cache_tail(caches, true_len, batch_axis=1):
+    """Zero cache entries at positions >= ``true_len`` along the seq axis.
+
+    Right-pad hygiene for bucketed prefill: a prompt padded to its bucket
+    edge writes pad-token KV at [true_len, bucket); zeroing that tail keeps
+    the invariant that a slot's cache holds exactly its real prefix (decode
+    validity masks would hide the pad entries anyway, but a clean cache
+    makes bucketed and exact-length prefill states bit-identical).
+
+    Works for flat stacked caches ([L, B, T, kvh, dh]) and the gemma3
+    local:global dict: global leaves index the seq axis by absolute
+    position; local ring leaves index by ring slot, where ``_ring_gather``
+    already zeroed slots beyond the true length (for rings shorter than
+    ``true_len`` every slot holds a real position and the mask is a no-op).
+    ``true_len`` may be a traced scalar.
+    """
+    def _mask(c):
+        seq_axis = batch_axis + 1
+        idx = lax.broadcasted_iota(jnp.int32, c.shape, seq_axis)
+        return jnp.where(idx < true_len, c, jnp.zeros((), c.dtype))
+    return jax.tree.map(_mask, caches)
+
+
 def gather_cache_slot(caches, slot, batch_axis=1):
     """Extract one batch row of a cache pytree as a batch-1 cache."""
     return jax.tree.map(

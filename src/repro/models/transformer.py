@@ -112,7 +112,8 @@ class DecoderLM:
             ff, aux = common.mlp(y, p["mlp"], shd), 0.0
         return x + ff, new_cache, aux
 
-    def _run_stack(self, x, params, *, positions, caches=None, cache_pos=None):
+    def _run_stack(self, x, params, *, positions, caches=None, cache_pos=None,
+                   true_len=None):
         """Run the layer stack.
 
         caches: None (training) | (k_all, v_all) stacked [L,B,T,kvh,dh]
@@ -120,6 +121,11 @@ class DecoderLM:
         Caches ride in the scan CARRY and are updated in place
         (dynamic-update-slice on the donated buffers) — a single cache copy
         lives in HBM, not the 2x of a scan-ys formulation.
+
+        true_len: traced true prompt length for bucketed (right-padded)
+        prefill — under causal masking the pad tail cannot change real
+        positions, but the window *ring* caches must be built from the true
+        last token, not the pad tail.
         """
         cfg = self.cfg
         flags = jnp.asarray(layer_flags(cfg))
@@ -159,7 +165,8 @@ class DecoderLM:
         if isinstance(caches, dict):
             return self._run_stack_windowed(x, params, positions=positions,
                                             caches=caches, cache_pos=cache_pos,
-                                            scan_flags=scan_flags)
+                                            scan_flags=scan_flags,
+                                            true_len=true_len)
 
         def body(carry, inp):
             xc, aux, ck_all, cv_all, li = carry
@@ -197,7 +204,7 @@ class DecoderLM:
         return max(self.cfg.sliding_window, 1)
 
     def _run_stack_windowed(self, x, params, *, positions, caches, cache_pos,
-                            scan_flags):
+                            scan_flags, true_len=None):
         """Scan with lax.cond per layer: global layers use the full-length
         cache stack, local layers a window-sized ring. Cuts KV memory by
         ~window/seq for the 5/6 local layers (gemma3: 32x at 32k)."""
@@ -243,8 +250,9 @@ class DecoderLM:
                     y, p["attn"], cfg, shd, positions=positions,
                     is_global=False, impl=self.attn_impl,
                     q_block=self.q_block, return_kv=True)
-                nk, nv = self._ring_gather(fk.astype(lk.dtype),
-                                           fv.astype(lv.dtype), s, w)
+                nk, nv = self._ring_gather(
+                    fk.astype(lk.dtype), fv.astype(lv.dtype),
+                    s if true_len is None else true_len, w)
             lk = lax.dynamic_update_slice_in_dim(lk, nk[None], lil, 0)
             lv = lax.dynamic_update_slice_in_dim(lv, nv[None], lil, 0)
             return xc + h, gk, gv, lk, lv, lig, lil + 1
@@ -323,13 +331,24 @@ class DecoderLM:
             return {"global": (ax, ax), "local": (axl, axl)}
         return (ax, ax)
 
-    def prefill(self, params, batch, caches):
-        """Prefill: writes KV caches at [0, S); returns (logits_last, caches)."""
+    def prefill(self, params, batch, caches, true_len=None):
+        """Prefill: writes KV caches at [0, S); returns (logits_last, caches).
+
+        true_len: optional traced scalar for bucketed (right-padded)
+        prompts — window ring caches are built from the true last token and
+        the returned logits come from position ``true_len - 1`` instead of
+        the pad tail. Cache positions >= true_len still hold pad KV; the
+        serving steps zero them via ``common.mask_cache_tail``."""
         x = self._inputs_to_h(batch, params)
         positions = jnp.arange(x.shape[1])
         x, caches, _ = self._run_stack(x, params, positions=positions,
-                                       caches=caches, cache_pos=0)
-        logits = common.unembed(x[:, -1:], params, self.shd)
+                                       caches=caches, cache_pos=0,
+                                       true_len=true_len)
+        if true_len is None:
+            last = x[:, -1:]
+        else:
+            last = lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+        logits = common.unembed(last, params, self.shd)
         return logits, caches
 
     def decode_step(self, params, token, pos, caches):

@@ -14,10 +14,21 @@ with power traces *derived* from the roofline/DVFS energy model
                      J/token attribution via GPIO slot tags, and an
                      energy-aware admission policy (DVFS power capping +
                      TTL shedding from measured throughput).
+
+Both engines bucket prefill lengths by default (``prefill_buckets="auto"``:
+power-of-two edges up to ``max_seq``): prompts are right-padded to the
+bucket edge so the number of compiled prefill executables is bounded by the
+bucket count instead of growing with every distinct prompt length. Every
+jitted step runs through ``serve.step.counting_jit``; compile counts are
+exposed in the run stats (``prefill_compiles``/``decode_compiles``), as
+telemetry counters on the ``MonitorSession`` report, and regression-gated
+in CI — unbounded compilation silently dominates the J/token numbers the
+platform exists to measure.
 """
 from __future__ import annotations
 
 import contextlib
+import inspect
 import time
 from typing import Dict, List, Optional
 
@@ -32,10 +43,52 @@ from repro.core.tags import N_GPIO
 from repro.models.common import reset_cache_slot
 from repro.serve.queue import AdmissionController, Request, RequestQueue
 from repro.serve.slots import SlotManager
-from repro.serve.step import make_decode_step, make_slot_prefill
+from repro.serve.step import (TraceStats, bucket_for, counting_jit,
+                              make_decode_step, make_prefill_step,
+                              make_slot_prefill, pad_to_bucket)
+from repro.serve.step import prefill_buckets as auto_prefill_buckets
 from repro.telemetry import ModelSource, MonitorSession
 
 __all__ = ["Request", "ServeEngine", "ContinuousEngine", "EngineTelemetry"]
+
+
+def supports_bucketed_prefill(model) -> bool:
+    """True when ``model.prefill`` accepts the ``true_len`` kwarg.
+
+    The transformer families (dense/MoE/VLM, gemma3 windows) do; the
+    recurrent-state families (SSM/hybrid, whisper) prefill sequentially and
+    cannot right-pad — a pad tail would corrupt the carried state."""
+    try:
+        sig = inspect.signature(model.prefill)
+    except (TypeError, ValueError):
+        return False
+    return "true_len" in sig.parameters
+
+
+def resolve_buckets(spec, max_seq: int, model=None):
+    """Normalize a ``prefill_buckets`` argument.
+
+    ``"auto"``/True -> power-of-two edges up to ``max_seq``; ``None``/
+    ``"off"``/False -> bucketing disabled (exact-length prefill, one
+    executable per distinct length); an iterable -> explicit edges (sorted,
+    deduped, capped at ``max_seq``). With a ``model``, ``"auto"`` silently
+    degrades to off when the model cannot prefill under right-pad
+    (``supports_bucketed_prefill``); explicitly requested edges raise."""
+    if spec in (None, False, "off", "none"):
+        return None
+    supported = model is None or supports_bucketed_prefill(model)
+    if spec in (True, "auto"):
+        return auto_prefill_buckets(max_seq) if supported else None
+    if not supported:
+        raise ValueError(
+            f"{type(model).__name__}.prefill takes no true_len: this family "
+            "cannot use length-bucketed prefill (pass prefill_buckets='off')")
+    edges = sorted({min(int(b), max_seq) for b in spec if int(b) >= 1})
+    if not edges:
+        raise ValueError(f"no usable prefill buckets in {spec!r}")
+    if edges[-1] < max_seq:
+        edges.append(max_seq)     # every admissible prompt must fit a bucket
+    return tuple(edges)
 
 
 def _count_params(params) -> float:
@@ -110,7 +163,10 @@ class EngineTelemetry:
 
     def energy_stats(self) -> Dict:
         rep = self.session.report()
-        return {"energy_j": rep.energy_j, "energy_by_tag": dict(rep.by_tag)}
+        out = {"energy_j": rep.energy_j, "energy_by_tag": dict(rep.by_tag)}
+        if rep.counters:
+            out["counters"] = dict(rep.counters)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -123,23 +179,39 @@ class ServeEngine:
     baseline the continuous engine is benchmarked against."""
 
     def __init__(self, model, params, *, batch_size: int, max_seq: int,
-                 telemetry: bool = True, dev: DeviceSpec = TPU_V5E):
+                 telemetry: bool = True, dev: DeviceSpec = TPU_V5E,
+                 prefill_buckets="auto"):
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.max_seq = max_seq
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(make_decode_step(model))
+        self.buckets = resolve_buckets(prefill_buckets, max_seq, model)
+        self.trace_stats = TraceStats()
+        self.stats = ThroughputStats()
         self.pm = ServePowerModel(
             _count_params(params), dev=dev,
             cache_bytes=_cache_bytes(model, batch_size, max_seq))
         self.tel = EngineTelemetry(self.pm, batch_size) if telemetry else None
+        self._prefill = counting_jit(
+            make_prefill_step(model, bucketed=bool(self.buckets)),
+            "prefill", self.trace_stats, on_compile=self._on_compile)
+        self._decode = counting_jit(make_decode_step(model), "decode",
+                                    self.trace_stats,
+                                    on_compile=self._on_compile)
+
+    def _on_compile(self, name: str):
+        if self.tel is not None:
+            self.tel.session.count(f"compiles/{name}")
 
     def _pad_prompts(self, reqs: List[Request]):
+        """Left-pad prompts to the longest in the batch (position alignment:
+        every row's last real token sits at ``s - 1``), then right-pad the
+        whole batch to its bucket edge so prefill shapes stay bounded."""
         s = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((self.batch_size, s), np.int32)
+        sb = bucket_for(s, self.buckets) if self.buckets else s
+        toks = np.zeros((self.batch_size, sb), np.int32)
         for i, r in enumerate(reqs):
-            toks[i, s - len(r.prompt):] = r.prompt   # left-pad
+            toks[i, s - len(r.prompt):s] = r.prompt   # left-pad
         return jnp.asarray(toks), s
 
     def serve(self, reqs: List[Request]) -> Dict:
@@ -162,12 +234,21 @@ class ServeEngine:
     def _serve_batch(self, reqs: List[Request], tokens, s: int,
                      caches) -> Dict:
         t0 = time.perf_counter()
-        logits, caches = self._prefill(self.params, {"tokens": tokens}, caches)
+        if self.buckets:
+            logits, caches = self._prefill(self.params, {"tokens": tokens},
+                                           jnp.int32(s), caches)
+        else:
+            logits, caches = self._prefill(self.params, {"tokens": tokens},
+                                           caches)
         cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         cur_host = np.asarray(cur)
         t_prefill = time.perf_counter() - t0
+        # attribute only the true prompt tokens: left-pad, bucket tail, and
+        # filler rows are compute the batch burns, not request throughput
+        n_prompt = sum(len(r.prompt) for r in reqs)
+        self.stats.observe("prefill", n_prompt, t_prefill)
         if self.tel:
-            self.tel.record("prefill", t_prefill, len(reqs) * s,
+            self.tel.record("prefill", t_prefill, n_prompt,
                             {i: r for i, r in enumerate(reqs)})
 
         for r in reqs:
@@ -202,6 +283,10 @@ class ServeEngine:
             dt = time.perf_counter() - td0
             t_dec += dt
             step += 1
+            # len(active), not batch_size: filler/finished rows decode as
+            # dead weight and must not inflate throughput or touch energy
+            # attribution (they own no slot tag)
+            self.stats.observe("decode", len(active), dt)
             if self.tel:
                 self.tel.record("decode", dt, len(active), active)
 
@@ -210,7 +295,10 @@ class ServeEngine:
             "decode_s": t_dec,
             "decode_steps": step,
             "tokens_decoded": n_decoded,
+            "prompt_tokens": n_prompt,
             "decode_tok_per_s": n_decoded / t_dec if t_dec else 0.0,
+            "prefill_compiles": self.trace_stats.compiles("prefill"),
+            "decode_compiles": self.trace_stats.compiles("decode"),
         }
 
 
@@ -232,13 +320,20 @@ class ContinuousEngine:
 
     def __init__(self, model, params, *, batch_size: int, max_seq: int,
                  telemetry: bool = True, dev: DeviceSpec = TPU_V5E,
-                 power_cap_w: Optional[float] = None, greedy: bool = True):
+                 power_cap_w: Optional[float] = None, greedy: bool = True,
+                 prefill_buckets="auto"):
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.max_seq = max_seq
-        self._decode = jax.jit(make_decode_step(model, greedy))
-        self._prefill_slot = jax.jit(make_slot_prefill(model))
+        self.buckets = resolve_buckets(prefill_buckets, max_seq, model)
+        self.trace_stats = TraceStats()
+        self._decode = counting_jit(make_decode_step(model, greedy),
+                                    "decode", self.trace_stats,
+                                    on_compile=self._on_compile)
+        self._prefill_slot = counting_jit(
+            make_slot_prefill(model, bucketed=bool(self.buckets)),
+            "prefill", self.trace_stats, on_compile=self._on_compile)
         self._reset_slot = jax.jit(reset_cache_slot)
         self.pm = ServePowerModel(
             _count_params(params), dev=dev,
@@ -255,6 +350,10 @@ class ContinuousEngine:
         self._decode_s = 0.0
         self._prefill_s = 0.0
         self._decode_steps = 0
+
+    def _on_compile(self, name: str):
+        if self.tel is not None:
+            self.tel.session.count(f"compiles/{name}")
 
     # -- request intake ------------------------------------------------------
 
@@ -287,18 +386,23 @@ class ContinuousEngine:
 
     def _shed_stale(self):
         """TTL shedding: a queued request's predicted wait is the remaining
-        token budget ahead of it (active slots + queue positions in front)
-        cleared at the measured decode rate."""
+        decode budget ahead of it (active slots + queue positions in front)
+        cleared at the measured decode rate, plus the queued prompts ahead
+        cleared at the measured prefill rate."""
         if not self.queue:
             return
         ahead = sum(s.req.max_new_tokens - s.req.n_generated
                     for s in self.slots.active_slots())
+        ahead_prefill = 0
         for req in self.queue.snapshot():
-            if self.admission.should_shed(req, ahead):
-                self.queue.remove(req)
-                self.queue.shed(req)
+            if self.admission.should_shed(req, ahead, ahead_prefill):
+                self.queue.shed(req)     # shed() drops it from the queue too
             else:
+                # a queued request costs its prompt (prefill) AND its
+                # budget (decode) — tracked separately so each phase is
+                # priced at its own measured rate
                 ahead += req.max_new_tokens
+                ahead_prefill += len(req.prompt)
 
     def _admit(self):
         """Fill free slots from the queue, subject to the admission policy."""
@@ -319,10 +423,17 @@ class ContinuousEngine:
             self._prefill_into(self.slots.free_slots()[0], req)
 
     def _prefill_into(self, slot, req: Request):
-        tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        prompt = np.asarray(req.prompt, np.int32)
         t0 = time.perf_counter()
-        next_tok, _, self.caches = self._prefill_slot(
-            self.params, tokens, jnp.int32(slot.index), self.caches)
+        if self.buckets:
+            padded, n = pad_to_bucket(prompt, self.buckets)
+            next_tok, _, self.caches = self._prefill_slot(
+                self.params, jnp.asarray(padded[None, :]), jnp.int32(n),
+                jnp.int32(slot.index), self.caches)
+        else:
+            next_tok, _, self.caches = self._prefill_slot(
+                self.params, jnp.asarray(prompt[None, :]),
+                jnp.int32(slot.index), self.caches)
         first = int(np.asarray(next_tok)[0, 0])
         dt = time.perf_counter() - t0
         req.prefill_s = dt
@@ -375,9 +486,13 @@ class ContinuousEngine:
             "decode_tok_per_s": (self._n_emitted / self._decode_s
                                  if self._decode_s else 0.0),
             "prefills": self.slots.n_assigned,
+            "prompt_tokens": self.slots.n_prefill_tokens,
             "slots_recycled": self.slots.n_released,
             "peak_active": self.slots.peak_active,
             "dvfs_f_ghz": self.dvfs.f_ghz if self.dvfs else None,
+            "prefill_compiles": self.trace_stats.compiles("prefill"),
+            "decode_compiles": self.trace_stats.compiles("decode"),
+            "prefill_buckets": list(self.buckets) if self.buckets else None,
         }
         if self.tel:
             stats.update(self.tel.energy_stats())
@@ -392,7 +507,11 @@ class ContinuousEngine:
     def reset_metrics(self):
         """Clear counters, queue state, and samples (benchmark warmup);
         jit caches and the KV buffer survive — freed slots are always
-        re-prefilled before reuse, so stale KV is never read."""
+        re-prefilled before reuse, so stale KV is never read.
+        ``trace_stats`` is intentionally NOT cleared: compile counts track
+        the engine's lifetime executable set (the thing the bucket bound
+        promises), while the telemetry session's ``compiles/*`` counters
+        reset with the samples they annotate."""
         self.finished = []
         self._n_emitted = 0
         self._decode_s = 0.0

@@ -60,13 +60,22 @@ class RequestQueue:
         return self._q[0]
 
     def shed(self, req: Request, reason: str = "shed"):
+        """Mark ``req`` shed AND drop it from the queue: a shed request must
+        never be ``pop()``-ed into a slot (callers used to need a separate
+        ``remove()``; forgetting it re-admitted dead requests)."""
         req.done = True
         req.finish_reason = reason
         self.n_shed += 1
+        try:
+            self._q.remove(req)
+        except ValueError:
+            pass    # already popped (e.g. shed straight from a pop())
 
     def queued_tokens(self) -> int:
-        """Token budget waiting in the queue (admission wait estimate)."""
-        return sum(r.max_new_tokens for r in self._q)
+        """Token budget waiting in the queue (admission wait estimate):
+        prompt tokens still to prefill plus the generation budget — counting
+        only ``max_new_tokens`` undercounts the wait and sheds too late."""
+        return sum(len(r.prompt) + r.max_new_tokens for r in self._q)
 
     def snapshot(self) -> List[Request]:
         """Queue contents in FIFO order (for shed walks)."""
@@ -142,14 +151,28 @@ class AdmissionController:
     def admit(self, n_active: int, batch_size: int) -> bool:
         return n_active < min(batch_size, self.max_slots(batch_size))
 
-    def should_shed(self, req: Request, tokens_ahead: int) -> bool:
-        """Shed when the predicted wait for the ``tokens_ahead`` queued/active
-        tokens in front of this request exceeds its TTL. A request with
-        nothing ahead of it is never shed — it would start immediately."""
+    def should_shed(self, req: Request, tokens_ahead: int,
+                    prefill_tokens_ahead: int = 0) -> bool:
+        """Shed when the predicted wait for the work in front of this
+        request exceeds its TTL. The two phases are priced separately:
+        ``tokens_ahead`` (decode budgets) at the measured decode rate and
+        ``prefill_tokens_ahead`` (prompt tokens still to prefill) at the
+        measured prefill rate — prefill moves a whole prompt per call, so
+        pricing prompts at the ~orders-slower decode rate would predict
+        waits that never happen and shed requests that would meet their
+        TTL. Unmeasured prefill contributes nothing (optimistic, like the
+        unmeasured-decode case). A request with nothing ahead of it is
+        never shed — it would start immediately. Injected ``should_shed_fn``
+        policies receive the decode-budget count only, unchanged from
+        before prompt accounting existed."""
         if self.should_shed_fn is not None:
             return self.should_shed_fn(req, tokens_ahead)
-        if req.ttl_s is None or tokens_ahead <= 0:
+        if req.ttl_s is None or tokens_ahead + prefill_tokens_ahead <= 0:
             return False
         if self.stats.rate("decode") <= 0:
             return False       # nothing measured yet: admit optimistically
-        return self.stats.predicted_wait_s(tokens_ahead) > req.ttl_s
+        wait = self.stats.predicted_wait_s(tokens_ahead)
+        prefill_rate = self.stats.rate("prefill")
+        if prefill_tokens_ahead > 0 and prefill_rate > 0:
+            wait += prefill_tokens_ahead / prefill_rate
+        return wait > req.ttl_s

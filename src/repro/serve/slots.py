@@ -36,6 +36,7 @@ class SlotManager:
         self.slots: List[Slot] = [Slot(i) for i in range(batch_size)]
         self.n_assigned = 0
         self.n_released = 0
+        self.n_prefill_tokens = 0   # true prompt tokens (bucket pad excluded)
         self.peak_active = 0
 
     def free_slots(self) -> List[Slot]:
@@ -49,7 +50,11 @@ class SlotManager:
         return sum(1 for s in self.slots if not s.free)
 
     def assign(self, slot: Slot, req: Request, first_token: int):
-        """Bind ``req`` after its prefill wrote cache [0, len(prompt))."""
+        """Bind ``req`` after its prefill wrote cache [0, len(prompt)).
+
+        ``slot.pos`` is always the TRUE prompt length: a bucketed prefill
+        right-pads to its bucket edge but scatters only the real prefix, so
+        decode resumes at the true position, not the padded one."""
         assert slot.free, f"slot {slot.index} busy"
         assert len(req.prompt) + req.max_new_tokens <= self.max_seq, (
             f"request {req.req_id} needs {len(req.prompt) + req.max_new_tokens}"
@@ -58,6 +63,7 @@ class SlotManager:
         slot.pos = len(req.prompt)
         slot.last_token = first_token
         self.n_assigned += 1
+        self.n_prefill_tokens += len(req.prompt)
         self.peak_active = max(self.peak_active, self.n_active)
 
     def advance(self, slot: Slot, token: int):

@@ -7,22 +7,195 @@ model's ``cache_axes()`` logical axes; for batch=1 long-context decode the
 syncs once per step for the whole batch (one [B,1] token fetch) instead of
 once per slot; ``pos`` may be a [B] vector for continuous batching.
 ``make_slot_prefill`` prefills a single request into one batch row of the
-shared cache while the other rows keep their in-flight state."""
+shared cache while the other rows keep their in-flight state.
+
+Prompt-length bucketing: an exact-length prefill retraces one executable
+per distinct prompt length, so production-shaped traffic (every prompt a
+different length) turns the engine into a compile loop. ``prefill_buckets``
+computes power-of-two bucket edges, ``bucket_for``/``pad_to_bucket``
+right-pad a prompt to its bucket edge, and the bucketed step variants take
+the *true* length as a traced scalar: logits are gathered at the true last
+token and only the real ``[0, len)`` cache positions survive the scatter
+(``mask_cache_tail``), so stale pad KV never leaks into later decode.
+Compile activity itself is first-class: every engine step goes through
+``counting_jit``, whose ``TraceStats`` counts one compile per distinct
+abstract input signature — the metric the CI cross-run gate regresses on.
+(Signature accounting is wrapper-level and deterministic; ``jax.monitoring``
+events would need process-global listeners and are backend-dependent.)
+"""
 from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import gather_cache_slot, scatter_cache_slot
+from repro.models.common import (gather_cache_slot, mask_cache_tail,
+                                 scatter_cache_slot)
 from repro.parallel.sharding import spec_for
 
 
-def make_prefill_step(model):
-    def prefill_step(params, batch, caches):
-        logits, caches = model.prefill(params, batch, caches)
-        return logits, caches
-    return prefill_step
+# ---------------------------------------------------------------------------
+# compile accounting
+
+
+class TraceStats:
+    """Per-step-family jit trace/compile counters.
+
+    One counter per step name ("prefill", "decode", ...): ``counting_jit``
+    bumps it whenever a call presents an abstract input signature (pytree
+    structure + leaf shapes/dtypes + static values) the wrapper has not seen
+    before — exactly the condition under which ``jax.jit`` traces and XLA
+    compiles a new executable. Bounded compile counts are a serving
+    invariant: with length bucketing, ``compiles("prefill")`` can never
+    exceed the bucket count no matter the traffic shape, and the CI
+    regression gate fails any PR that reintroduces a retrace.
+    """
+
+    def __init__(self):
+        self.compile_counts: Dict[str, int] = {}
+        self.call_counts: Dict[str, int] = {}
+
+    def record(self, name: str, new_trace: bool):
+        self.call_counts[name] = self.call_counts.get(name, 0) + 1
+        if new_trace:
+            self.compile_counts[name] = self.compile_counts.get(name, 0) + 1
+
+    def compiles(self, name: Optional[str] = None) -> int:
+        if name is not None:
+            return self.compile_counts.get(name, 0)
+        return sum(self.compile_counts.values())
+
+    def calls(self, name: str) -> int:
+        return self.call_counts.get(name, 0)
+
+    def snapshot(self) -> Dict[str, int]:
+        return dict(self.compile_counts)
+
+
+def _abstract_signature(args, kwargs):
+    """Hashable abstract signature of a call: treedef + per-leaf
+    (shape, dtype) for arrays, value identity for python statics."""
+    leaves, treedef = jax.tree.flatten((args, kwargs))
+
+    def describe(leaf):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return (tuple(leaf.shape), str(leaf.dtype),
+                    bool(getattr(leaf, "weak_type", False)))
+        return ("py", type(leaf).__name__, repr(leaf))
+
+    return (treedef,) + tuple(describe(l) for l in leaves)
+
+
+def counting_jit(fn, name: str, stats: Optional[TraceStats] = None,
+                 on_compile=None, **jit_kwargs):
+    """``jax.jit(fn)`` wrapped with trace accounting.
+
+    A call that grows the jit executable cache counts as one compile on
+    ``stats`` (and fires ``on_compile(name)`` — the hook engines use to
+    surface compile activity through telemetry counters). The primary
+    detector is the cache-size delta around the call (exact and O(1)); when
+    that private accessor is unavailable the wrapper falls back to tracking
+    abstract input signatures, which costs a pytree flatten per call. The
+    wrapped jitted function is exposed as ``wrapper.jitted``.
+    """
+    jitted = jax.jit(fn, **jit_kwargs)
+    cache_size = getattr(jitted, "_cache_size", None)
+    seen = set()
+
+    def wrapper(*args, **kwargs):
+        if cache_size is not None:
+            before = cache_size()
+            out = jitted(*args, **kwargs)
+            new = cache_size() > before
+        else:
+            sig = _abstract_signature(args, kwargs)
+            new = sig not in seen
+            if new:
+                seen.add(sig)
+            out = jitted(*args, **kwargs)
+        if stats is not None:
+            stats.record(name, new)
+        if new and on_compile is not None:
+            on_compile(name)
+        return out
+
+    wrapper.jitted = jitted
+    wrapper.step_name = name
+    return wrapper
+
+
+# ---------------------------------------------------------------------------
+# prompt-length bucketing
+
+
+def prefill_buckets(max_len: int, min_bucket: int = 8) -> Tuple[int, ...]:
+    """Power-of-two bucket edges covering prompt lengths in [1, max_len].
+
+    Edges double from ``min_bucket`` and the last edge is clamped to
+    ``max_len`` (a prompt can never exceed the cache), so the number of
+    distinct prefill shapes — and therefore compiled executables — is
+    O(log2(max_len / min_bucket)) regardless of traffic.
+    """
+    if max_len < 1:
+        raise ValueError(f"max_len must be >= 1, got {max_len}")
+    edges: List[int] = []
+    b = min(min_bucket, max_len)
+    while b < max_len:
+        edges.append(b)
+        b *= 2
+    edges.append(min(b, max_len))
+    return tuple(edges)
+
+
+def bucket_for(length: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket edge >= length (exact length past the last edge)."""
+    for edge in buckets:
+        if length <= edge:
+            return edge
+    return length
+
+
+def pad_to_bucket(prompt: np.ndarray, buckets: Sequence[int],
+                  pad_id: int = 0) -> Tuple[np.ndarray, int]:
+    """Right-pad a [S] prompt to its bucket edge; returns (padded, true_len).
+
+    Right-padding (not left) keeps every real token at its true position:
+    under causal masking the pad tail cannot influence real positions, so
+    bucketed logits at ``true_len - 1`` match the exact-length prefill.
+    """
+    prompt = np.asarray(prompt, np.int32)
+    n = len(prompt)
+    edge = bucket_for(n, buckets)
+    if edge == n:
+        return prompt, n
+    padded = np.full(edge, pad_id, np.int32)
+    padded[:n] = prompt
+    return padded, n
+
+
+# ---------------------------------------------------------------------------
+# step builders
+
+
+def make_prefill_step(model, bucketed: bool = False):
+    """Whole-batch prefill. ``bucketed=True`` adds a traced ``true_len``
+    argument: the batch is right-padded to a bucket edge, logits come from
+    the true last token, and cache positions >= true_len are zeroed so pad
+    KV never reaches decode."""
+    if not bucketed:
+        def prefill_step(params, batch, caches):
+            logits, caches = model.prefill(params, batch, caches)
+            return logits, caches
+        return prefill_step
+
+    def bucketed_prefill_step(params, batch, true_len, caches):
+        logits, caches = model.prefill(params, batch, caches,
+                                       true_len=true_len)
+        return logits, mask_cache_tail(caches, true_len)
+    return bucketed_prefill_step
 
 
 def make_decode_step(model, greedy=True):
@@ -37,16 +210,31 @@ def make_decode_step(model, greedy=True):
     return decode_step
 
 
-def make_slot_prefill(model):
+def make_slot_prefill(model, bucketed: bool = False):
     """Prefill one request ([1, S] tokens) into batch row ``slot`` of a
-    shared cache pytree; every other row is untouched. Distinct prompt
-    lengths retrace (jit caches one executable per S)."""
-    def slot_prefill(params, tokens, slot, caches):
+    shared cache pytree; every other row is untouched.
+
+    Exact mode retraces per distinct prompt length (jit caches one
+    executable per S). Bucketed mode takes right-padded tokens plus the
+    traced true length: executables are bounded by the bucket count, the
+    next token comes from the logits at ``true_len - 1``, and only the real
+    ``[0, true_len)`` cache positions are scattered back."""
+    if not bucketed:
+        def slot_prefill(params, tokens, slot, caches):
+            sub = gather_cache_slot(caches, slot)
+            logits, sub = model.prefill(params, {"tokens": tokens}, sub)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, logits, scatter_cache_slot(caches, sub, slot)
+        return slot_prefill
+
+    def bucketed_slot_prefill(params, tokens, true_len, slot, caches):
         sub = gather_cache_slot(caches, slot)
-        logits, sub = model.prefill(params, {"tokens": tokens}, sub)
+        logits, sub = model.prefill(params, {"tokens": tokens}, sub,
+                                    true_len=true_len)
+        sub = mask_cache_tail(sub, true_len)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, logits, scatter_cache_slot(caches, sub, slot)
-    return slot_prefill
+    return bucketed_slot_prefill
 
 
 def serve_rules(shape):

@@ -35,7 +35,11 @@ from repro.telemetry.source import PowerSource
 
 @dataclasses.dataclass(frozen=True)
 class EnergyReport:
-    """Typed summary of a monitored interval."""
+    """Typed summary of a monitored interval.
+
+    ``counters`` carries session-level event counts (``session.count``) —
+    e.g. the serving engines' per-step jit compile counts — so compile
+    activity rides the same report the energy numbers do."""
 
     energy_j: float
     by_tag: Dict[str, float]
@@ -43,14 +47,17 @@ class EnergyReport:
     n_samples: int
     duration_s: float
     j_per_token: Optional[float] = None
+    counters: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def __str__(self) -> str:
         tags = {k: round(v, 3) for k, v in sorted(self.by_tag.items())}
         jt = (f" {self.j_per_token:.4f} J/token"
               if self.j_per_token is not None else "")
+        cnt = (f" counters={dict(sorted(self.counters.items()))}"
+               if self.counters else "")
         return (f"{self.energy_j:.3f} J over {self.duration_s:.3f} s "
                 f"({self.avg_power_w:.1f} W avg, {self.n_samples} samples)"
-                f"{jt} by_tag={tags}")
+                f"{jt} by_tag={tags}{cnt}")
 
 
 class Window:
@@ -110,6 +117,7 @@ class MonitorSession:
         self._blocks: List[SampleBlock] = []
         self._n_dropped = 0          # blocks removed by drain()/reset()
         self._total_j = 0.0
+        self._counters: Dict[str, float] = {}
 
     # -- clock / board -------------------------------------------------------
 
@@ -137,6 +145,19 @@ class MonitorSession:
     def region(self, name: str):
         """``with session.region("prefill"): ...`` — GPIO region tagging."""
         return self._board.tags.tag(name)
+
+    # -- counters ------------------------------------------------------------
+
+    def count(self, name: str, n: float = 1):
+        """Bump a session-level event counter (jit compiles, cache misses,
+        sheds, ...). Counters land on :class:`EnergyReport` so activity that
+        burns watts without moving tokens — XLA compilation above all — is
+        visible next to the energy it cost, and cleared by :meth:`reset`."""
+        self._counters[name] = self._counters.get(name, 0) + n
+
+    @property
+    def counters(self) -> Dict[str, float]:
+        return dict(self._counters)
 
     # -- sampling ------------------------------------------------------------
 
@@ -247,13 +268,17 @@ class MonitorSession:
     def report(self, tokens: Optional[int] = None) -> EnergyReport:
         """Session-lifetime energy report (since construction or the last
         :meth:`reset`)."""
-        return self._report_over(self._blocks, self._cursor - self._origin,
-                                 tokens)
+        rep = self._report_over(self._blocks, self._cursor - self._origin,
+                                tokens)
+        if self._counters:
+            rep = dataclasses.replace(rep, counters=dict(self._counters))
+        return rep
 
     def reset(self):
-        """Drop accumulated samples (benchmark warmup); the board clock and
-        tag bus keep running."""
+        """Drop accumulated samples and counters (benchmark warmup); the
+        board clock and tag bus keep running."""
         self._n_dropped += len(self._blocks)
         self._blocks = []
         self._origin = self._cursor
         self._total_j = 0.0
+        self._counters = {}

@@ -227,6 +227,7 @@ class ReplayRequest:
     max_new_tokens: int = 16
     ttl_s: Optional[float] = None
     arrival_s: float = 0.0
+    prompt_tokens: int = 0       # prefill cost in the shed walk (live parity)
     # filled by the simulation
     n_generated: int = 0
     energy_j: float = 0.0
@@ -298,16 +299,19 @@ def replay_policy(reader: TraceReader, workload: Sequence[ReplayRequest],
     while (pending or queue or active) and t < timeline.t_end + step_s:
         while pending and pending[0].arrival_s <= t:
             queue.append(pending.pop(0))
-        # TTL shed walk (same order + ahead accounting as the live engine)
+        # TTL shed walk (same order + ahead accounting as the live engine:
+        # decode budgets and queued prompt tokens tracked separately)
         ahead = sum(r.max_new_tokens - r.n_generated for r in active)
+        ahead_prefill = 0
         for r in list(queue):
             # should_shed only reads ttl_s, so ReplayRequest passes directly
-            if adm.should_shed(r, ahead):
+            if adm.should_shed(r, ahead, ahead_prefill):
                 queue.remove(r)
                 r.done, r.finish_reason = True, "shed"
                 shed += 1
             else:
                 ahead += r.max_new_tokens
+                ahead_prefill += r.prompt_tokens
         while queue and len(active) < batch_size and \
                 adm.admit(len(active), batch_size):
             active.append(queue.pop(0))

@@ -1,0 +1,384 @@
+"""Length-bucketed prefill: bucketed (right-padded) slot prefill must match
+exact-length prefill bit-for-bit — next-token logits, sampled token, AND the
+scattered cache state — across bucket edges and model families (dense +
+gemma3 local:global window rings), and a bucketed prefill followed by decode
+must reproduce the unbucketed trajectory. Compile activity is the other half
+of the contract: serving a workload of many distinct prompt lengths may
+compile at most ``len(buckets)`` prefill executables (the ``TraceStats``
+gate CI regresses on). Satellite regressions ride along: ``RequestQueue.shed``
+drops the request from the deque, ``queued_tokens`` counts prompt + budget,
+and static-engine filler rows stay out of throughput/energy attribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro import configs
+from repro.models import build_model
+from repro.serve.engine import (ContinuousEngine, Request, ServeEngine,
+                                resolve_buckets, supports_bucketed_prefill)
+from repro.serve.queue import RequestQueue
+from repro.serve.step import (TraceStats, bucket_for, counting_jit,
+                              make_decode_step, make_slot_prefill,
+                              pad_to_bucket, prefill_buckets)
+
+MAX_SEQ = 48
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = configs.get_smoke("granite-20b")
+    model = build_model(cfg, q_block=8)
+    params, _ = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def dense_steps(dense):
+    _, model, _ = dense
+    return (jax.jit(make_slot_prefill(model)),
+            jax.jit(make_slot_prefill(model, bucketed=True)))
+
+
+@pytest.fixture(scope="module")
+def windowed():
+    cfg = configs.get_smoke("gemma3-27b")
+    model = build_model(cfg, q_block=8)
+    params, _ = model.init(jax.random.key(1))
+    return cfg, model, params
+
+
+def _check_bucketed_matches_exact(cfg, model, params, exact, bucketed,
+                                  buckets, n, seed=0, max_seq=MAX_SEQ):
+    """Exact-length vs bucketed slot prefill of the same prompt into slot 1
+    of a batch-2 cache: logits, next token, and full cache state bit-equal."""
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    ca = model.init_cache(2, max_seq)
+    cb = model.init_cache(2, max_seq)
+    ta, la, ca = exact(params, jnp.asarray(prompt[None]), jnp.int32(1), ca)
+    padded, true_len = pad_to_bucket(prompt, buckets)
+    assert true_len == n and len(padded) == bucket_for(n, buckets)
+    tb, lb, cb = bucketed(params, jnp.asarray(padded[None]),
+                          jnp.int32(true_len), jnp.int32(1), cb)
+    assert np.array_equal(np.asarray(la), np.asarray(lb)), \
+        f"len={n}: bucketed logits differ from exact-length prefill"
+    assert int(np.asarray(ta)[0, 0]) == int(np.asarray(tb)[0, 0])
+    for xa, xb in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+        assert np.array_equal(np.asarray(xa), np.asarray(xb)), \
+            f"len={n}: bucketed cache state differs (stale pad KV leaked)"
+    return prompt, tb, cb
+
+
+# ---------------------------------------------------------------------------
+# bucket arithmetic
+
+
+def test_bucket_edges():
+    assert prefill_buckets(48) == (8, 16, 32, 48)
+    assert prefill_buckets(64) == (8, 16, 32, 64)
+    assert prefill_buckets(8) == (8,)
+    assert prefill_buckets(5) == (5,)
+    assert bucket_for(9, (8, 16, 32)) == 16
+    assert bucket_for(16, (8, 16, 32)) == 16
+    assert bucket_for(99, (8, 16, 32)) == 99   # beyond edges: exact
+
+
+def test_pad_to_bucket_right_pads():
+    padded, n = pad_to_bucket(np.arange(1, 6, dtype=np.int32), (8, 16))
+    assert n == 5 and len(padded) == 8
+    assert list(padded) == [1, 2, 3, 4, 5, 0, 0, 0]
+    exact, n = pad_to_bucket(np.arange(8, dtype=np.int32), (8, 16))
+    assert n == 8 and len(exact) == 8           # on the edge: no padding
+
+
+def test_resolve_buckets():
+    assert resolve_buckets("off", 48) is None
+    assert resolve_buckets(None, 48) is None
+    assert resolve_buckets("auto", 48) == (8, 16, 32, 48)
+    # explicit edges are deduped/sorted and extended to cover max_seq
+    assert resolve_buckets([16, 8, 8], 48) == (8, 16, 48)
+    with pytest.raises(ValueError):
+        resolve_buckets([], 48)
+
+
+class _RecurrentStub:
+    """Minimal model whose prefill carries recurrent state (no true_len):
+    the shape of the SSM/hybrid/whisper families."""
+
+    def init_cache(self, batch_size, max_seq, dtype=jnp.float32):
+        return jnp.zeros((batch_size, 4), dtype)
+
+    def prefill(self, params, batch, states):
+        logits = jnp.zeros((batch["tokens"].shape[0], 1, 8))
+        return logits, states
+
+    def decode_step(self, params, token, pos, states):
+        return jnp.zeros((token.shape[0], 1, 8)), states
+
+
+def test_auto_bucketing_degrades_for_recurrent_models():
+    """Right-pad bucketing would corrupt carried state, so 'auto' falls
+    back to exact-length prefill instead of crashing at serve time —
+    and explicitly requested buckets are a loud error."""
+    stub = _RecurrentStub()
+    assert not supports_bucketed_prefill(stub)
+    params = {"w": jnp.ones((2, 2))}
+    eng = ServeEngine(stub, params, batch_size=1, max_seq=8, telemetry=False)
+    assert eng.buckets is None
+    eng = ContinuousEngine(stub, params, batch_size=1, max_seq=8,
+                           telemetry=False)
+    assert eng.buckets is None
+    with pytest.raises(ValueError, match="true_len"):
+        ServeEngine(stub, params, batch_size=1, max_seq=8, telemetry=False,
+                    prefill_buckets=[4, 8])
+
+
+def test_counting_jit_counts_signatures():
+    stats = TraceStats()
+    f = counting_jit(lambda x: x * 2, "f", stats)
+    f(jnp.ones((2,)))
+    f(jnp.zeros((2,)))                  # same shape: no new trace
+    f(jnp.ones((3,)))                   # new shape: compile
+    assert stats.compiles("f") == 2 and stats.calls("f") == 3
+
+
+# ---------------------------------------------------------------------------
+# bit-for-bit equivalence across bucket edges
+
+
+def test_bucketed_prefill_matches_exact_at_bucket_edges(dense, dense_steps):
+    """len = edge-1, edge, edge+1 for every bucket edge."""
+    cfg, model, params = dense
+    exact, bucketed = dense_steps
+    buckets = prefill_buckets(MAX_SEQ)
+    lengths = sorted({min(max(n, 1), MAX_SEQ)
+                      for e in buckets for n in (e - 1, e, e + 1)})
+    for n in lengths:
+        _check_bucketed_matches_exact(cfg, model, params, exact, bucketed,
+                                      buckets, n, seed=n)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(1, MAX_SEQ), seed=st.integers(0, 2**31 - 1))
+    def test_bucketed_prefill_matches_exact_property(dense, dense_steps,
+                                                     n, seed):
+        cfg, model, params = dense
+        exact, bucketed = dense_steps
+        _check_bucketed_matches_exact(cfg, model, params, exact, bucketed,
+                                      prefill_buckets(MAX_SEQ), n, seed=seed)
+
+
+def test_bucketed_prefill_matches_exact_seeded(dense, dense_steps):
+    """Seeded sweep of the same property (runs without hypothesis)."""
+    cfg, model, params = dense
+    exact, bucketed = dense_steps
+    rng = np.random.default_rng(42)
+    for n in rng.integers(1, MAX_SEQ + 1, 6):
+        _check_bucketed_matches_exact(cfg, model, params, exact, bucketed,
+                                      prefill_buckets(MAX_SEQ), int(n),
+                                      seed=int(n) + 1000)
+
+
+def test_windowed_bucketed_prefill_matches_exact(windowed):
+    """gemma3 local:global ring caches: the ring must be built from the
+    true last token, not the pad tail."""
+    cfg, model, params = windowed
+    exact = jax.jit(make_slot_prefill(model))
+    bucketed = jax.jit(make_slot_prefill(model, bucketed=True))
+    buckets = prefill_buckets(32)
+    for n in (7, 9, 16, 31):
+        _check_bucketed_matches_exact(cfg, model, params, exact, bucketed,
+                                      buckets, n, seed=n, max_seq=32)
+
+
+def test_bucketed_prefill_then_decode_matches_exact_trajectory(dense,
+                                                               dense_steps):
+    """A bucketed prefill followed by N decode steps reproduces the
+    unbucketed trajectory: per-step logits and tokens, bit-for-bit."""
+    cfg, model, params = dense
+    exact, bucketed = dense_steps
+    n = 13                                       # interior of the 16 bucket
+    prompt, tok_b, cache_b = _check_bucketed_matches_exact(
+        cfg, model, params, exact, bucketed, prefill_buckets(MAX_SEQ), n,
+        seed=7)
+    ca = model.init_cache(2, MAX_SEQ)
+    tok_a, _, ca = exact(params, jnp.asarray(prompt[None]), jnp.int32(1), ca)
+    decode = jax.jit(make_decode_step(model))
+    cb = cache_b
+    for step in range(6):
+        pos = jnp.asarray([0, n + step], jnp.int32)
+        ta = jnp.asarray([[0], [int(np.asarray(tok_a)[0, 0])]], jnp.int32)
+        tb = jnp.asarray([[0], [int(np.asarray(tok_b)[0, 0])]], jnp.int32)
+        tok_a, la, ca = decode(params, ta, pos, ca)
+        tok_b, lb, cb = decode(params, tb, pos, cb)
+        assert np.array_equal(np.asarray(la)[1], np.asarray(lb)[1]), \
+            f"decode step {step}: logits diverged after bucketed prefill"
+        assert int(np.asarray(tok_a)[1, 0]) == int(np.asarray(tok_b)[1, 0])
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence + the bounded-compile contract
+
+
+def _mixed_reqs(cfg, lengths, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lengths)]
+
+
+def test_continuous_engine_bucketed_matches_exact(dense):
+    cfg, model, params = dense
+    lengths = [3, 9, 17, 33, 47]
+    a = _mixed_reqs(cfg, lengths, seed=5)
+    b = _mixed_reqs(cfg, lengths, seed=5)
+    e_off = ContinuousEngine(model, params, batch_size=3, max_seq=64,
+                             telemetry=False, prefill_buckets="off")
+    e_on = ContinuousEngine(model, params, batch_size=3, max_seq=64,
+                            telemetry=False, prefill_buckets="auto")
+    s_off = e_off.serve(a)
+    s_on = e_on.serve(b)
+    for ra, rb in zip(a, b):
+        assert ra.output == rb.output
+    assert s_off["prefill_compiles"] == len(set(lengths))   # the explosion
+    assert s_on["prefill_compiles"] <= len(e_on.buckets)    # the fix
+
+
+def test_windowed_engine_bucketed_matches_exact(windowed):
+    cfg, model, params = windowed
+    lengths = [5, 11, 21]
+    a = _mixed_reqs(cfg, lengths, max_new=4, seed=6)
+    b = _mixed_reqs(cfg, lengths, max_new=4, seed=6)
+    ContinuousEngine(model, params, batch_size=2, max_seq=32,
+                     telemetry=False, prefill_buckets="off").serve(a)
+    ContinuousEngine(model, params, batch_size=2, max_seq=32,
+                     telemetry=False, prefill_buckets="auto").serve(b)
+    for ra, rb in zip(a, b):
+        assert ra.output == rb.output
+
+
+def test_static_engine_bucketed_matches_exact(dense):
+    """Static batch: left-pad to the batch max, right-pad to the bucket
+    edge; logits come from the true last position."""
+    cfg, model, params = dense
+    lengths = [3, 11]                            # batch max 11 -> bucket 16
+    a = _mixed_reqs(cfg, lengths, max_new=5, seed=8)
+    b = _mixed_reqs(cfg, lengths, max_new=5, seed=8)
+    ServeEngine(model, params, batch_size=2, max_seq=48, telemetry=False,
+                prefill_buckets="off").serve(a)
+    eng = ServeEngine(model, params, batch_size=2, max_seq=48,
+                      telemetry=False, prefill_buckets="auto")
+    st = eng.serve(b)
+    for ra, rb in zip(a, b):
+        assert ra.output == rb.output
+    assert st["prompt_tokens"] == sum(lengths)
+
+
+def test_bounded_prefill_compiles_under_mixed_traffic(dense):
+    """THE acceptance gate: >= 32 distinct prompt lengths compile at most
+    len(buckets) prefill executables, and compile activity is surfaced in
+    run stats and telemetry counters."""
+    cfg, model, params = dense
+    eng = ContinuousEngine(model, params, batch_size=4, max_seq=64)
+    lengths = list(range(2, 34))                 # 32 distinct lengths
+    stats = eng.serve(_mixed_reqs(cfg, lengths, max_new=2, seed=9))
+    assert stats["completed"] == len(lengths)
+    n_buckets = len(eng.buckets)
+    assert stats["prefill_compiles"] <= n_buckets
+    used = {bucket_for(n, eng.buckets) for n in lengths}
+    assert stats["prefill_compiles"] == len(used)
+    assert stats["decode_compiles"] == 1         # fixed decode shapes
+    assert stats["prefill_buckets"] == list(eng.buckets)
+    # lifetime TraceStats agrees with the jit wrappers
+    assert eng.trace_stats.compiles("prefill") == stats["prefill_compiles"]
+    assert eng.trace_stats.calls("prefill") == len(lengths)
+    # ... and telemetry carries the same counts on the energy report
+    rep = eng.tel.session.report()
+    assert rep.counters["compiles/prefill"] == stats["prefill_compiles"]
+    assert rep.counters["compiles/decode"] == 1
+    assert "compiles/prefill" in stats["counters"]
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+
+
+def test_shed_removes_request_from_queue():
+    """A shed request must never be pop()-ed into a slot."""
+    q = RequestQueue()
+    r1 = Request(1, np.arange(4, dtype=np.int32), max_new_tokens=2)
+    r2 = Request(2, np.arange(4, dtype=np.int32), max_new_tokens=2)
+    q.push(r1)
+    q.push(r2)
+    q.shed(r1, "shed")
+    assert len(q) == 1 and q.n_shed == 1
+    assert r1.done and r1.finish_reason == "shed"
+    assert q.pop() is r2                        # r1 can't re-enter a slot
+    assert not q
+
+
+def test_shed_after_pop_is_idempotent():
+    q = RequestQueue()
+    r = Request(1, np.arange(4, dtype=np.int32), max_new_tokens=2)
+    q.push(r)
+    q.shed(q.pop(), "shed-cap")                 # already out of the deque
+    assert len(q) == 0 and q.n_shed == 1
+
+
+def test_queued_tokens_counts_prompt_and_budget():
+    q = RequestQueue()
+    q.push(Request(1, np.arange(5, dtype=np.int32), max_new_tokens=7))
+    q.push(Request(2, np.arange(3, dtype=np.int32), max_new_tokens=2))
+    assert q.queued_tokens() == (5 + 7) + (3 + 2)
+
+
+def test_shed_prices_prefill_at_prefill_rate():
+    """Prompt tokens ahead are priced at the measured prefill rate, not the
+    orders-slower decode rate — otherwise a long queued prompt predicts a
+    wait that never happens and sheds requests that would meet their TTL."""
+    from repro.core.scheduler import ThroughputStats
+    from repro.serve.queue import AdmissionController
+    stats = ThroughputStats()
+    stats.observe("decode", 50, 1.0)        # 50 tok/s decode
+    stats.observe("prefill", 5000, 1.0)     # a whole prompt per call
+    adm = AdmissionController(stats=stats)
+    req = Request(1, np.arange(8, dtype=np.int32), max_new_tokens=8,
+                  ttl_s=2.0)
+    # 8 decode + 500 prompt tokens ahead: 0.16s + 0.1s, well inside the TTL
+    assert not adm.should_shed(req, 8, 500)
+    # ... while decode-rate pricing would have (wrongly) shed it
+    assert stats.predicted_wait_s(8 + 500) > req.ttl_s
+    # a genuinely long prefill backlog still sheds
+    assert adm.should_shed(req, 8, 500_000)
+    # unmeasured prefill rate: prompts contribute nothing (optimistic,
+    # same stance as the unmeasured-decode case)
+    s2 = ThroughputStats()
+    s2.observe("decode", 50, 1.0)
+    assert not AdmissionController(stats=s2).should_shed(req, 8, 10_000)
+
+
+def test_static_filler_rows_stay_out_of_attribution(dense):
+    """Fewer requests than batch_size: filler rows decode as dead weight but
+    contribute nothing to throughput stats or per-request joules."""
+    cfg, model, params = dense
+    eng = ServeEngine(model, params, batch_size=4, max_seq=48)
+    reqs = _mixed_reqs(cfg, [6, 9], max_new=4, seed=10)
+    stats = eng.serve(reqs)
+    assert stats["prompt_tokens"] == 15          # true tokens, no pad/filler
+    # all board energy lands on the two real requests
+    parts = sum(r.energy_j for r in reqs)
+    assert stats["energy_j"] > 0
+    assert abs(stats["energy_j"] - parts) <= 1e-6 + 0.01 * stats["energy_j"]
+    # measured decode throughput counts active rows, not the padded batch:
+    # 2 real rows per step, never the 4 the filler-padded batch decodes
+    assert eng.stats.totals["decode"] == 2 * stats["decode_steps"]
+    assert eng.stats.totals["prefill"] == 15
+    assert eng.stats.rate("decode") > 0
