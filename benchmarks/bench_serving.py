@@ -12,9 +12,19 @@ through the continuous engine with prefill bucketing off vs on: exact-length
 prefill compiles one executable per length (the retrace explosion), bucketed
 prefill is bounded by the bucket count. Reports end-to-end tokens/s for both
 (acceptance gate: >= 2x from bucketing), the compile counts, and asserts the
-generated tokens are identical. ``--json PATH`` dumps the rows for the CI
-perf-trajectory artifact; the ``compiles`` fields are what the cross-run
-regression gate (``benchmarks.regression_gate``) pins.
+generated tokens are identical.
+
+A third scenario is the paged-KV headline: N requests sharing a long common
+system prompt, served with the radix prefix cache off vs on. With the cache,
+the shared prefix prefills ONCE — later requests map its blocks by reference
+and compute only their distinct tail — so prefill compute drops from
+O(requests x prompt) to O(prompt + requests x tail). Reports prefill tokens
+computed vs served, the cache hit rate, end-to-end tokens/s (acceptance
+gate: >= 2x from prefix caching), J/token from the modeled energy, and
+asserts cached tokens are identical to cold. ``--json PATH`` dumps the rows
+for the CI perf-trajectory artifact; the ``compiles`` fields are what the
+cross-run regression gate (``benchmarks.regression_gate``) pins, and the
+``hit_rate`` field is gated against decreases the same way.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--json PATH]
 """
@@ -93,6 +103,41 @@ def run_mixed(model, params, cfg, args, buckets):
     return reqs, st
 
 
+def make_shared_prefix_requests(cfg, n, prefix_len, tail_len, max_new,
+                                seed=0):
+    """N prompts = one shared system prefix + per-request distinct tails —
+    the traffic shape prefix caching exists for."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = np.random.default_rng(seed * 1000 + i + 1).integers(
+            0, cfg.vocab_size, tail_len).astype(np.int32)
+        out.append(Request(i, np.concatenate([shared, tail]),
+                           max_new_tokens=max_new))
+    return out
+
+
+def run_shared_prefix(model, params, cfg, args, prefix_cache):
+    eng = ContinuousEngine(model, params, batch_size=args.batch,
+                           max_seq=args.prefix_max_seq,
+                           prefix_cache=prefix_cache)
+    # warmup compiles both prefill shapes the measured phase needs: the
+    # full-prompt bucket (cold misses) and the tail bucket (cache hits);
+    # reset_metrics clears the trie so the measured phase starts cold
+    eng.serve(make_shared_prefix_requests(
+        cfg, args.batch, args.prefix_len, args.prefix_tail,
+        args.prefix_max_new, seed=99))
+    eng.reset_metrics()
+    reqs = make_shared_prefix_requests(
+        cfg, args.prefix_requests, args.prefix_len, args.prefix_tail,
+        args.prefix_max_new)
+    t0 = time.perf_counter()
+    st = eng.serve(reqs)
+    st["wall_s"] = time.perf_counter() - t0
+    return reqs, st
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-20b")
@@ -105,6 +150,14 @@ def main(argv=None):
     ap.add_argument("--mixed-min-len", type=int, default=4)
     ap.add_argument("--mixed-max-new", type=int, default=4)
     ap.add_argument("--mixed-max-seq", type=int, default=64)
+    ap.add_argument("--prefix-requests", type=int, default=16,
+                    help="requests in the shared-prefix scenario")
+    ap.add_argument("--prefix-len", type=int, default=96,
+                    help="shared system-prompt length")
+    ap.add_argument("--prefix-tail", type=int, default=4,
+                    help="distinct per-request tail length")
+    ap.add_argument("--prefix-max-new", type=int, default=2)
+    ap.add_argument("--prefix-max-seq", type=int, default=128)
     ap.add_argument("--json", default=None,
                     help="dump rows as JSON (CI perf-trajectory artifact)")
     args = ap.parse_args(argv)
@@ -160,6 +213,34 @@ def main(argv=None):
                 f"compiles={b_st['prefill_compiles']};"
                 f"unbucketed={u_st['prefill_compiles']}",
                 compiles=b_st["prefill_compiles"])
+
+    # -- shared-prefix scenario: radix prefix cache off vs on --------------
+    p_reqs, p_st = run_shared_prefix(model, params, cfg, args,
+                                     prefix_cache=False)
+    h_reqs, h_st = run_shared_prefix(model, params, cfg, args,
+                                     prefix_cache=True)
+    assert all(a.output == b.output for a, b in zip(p_reqs, h_reqs)), \
+        "prefix-cache hits changed generated tokens"
+
+    p_tps, h_tps = _e2e_tps(p_st), _e2e_tps(h_st)
+    prefix_speedup = h_tps / p_tps if p_tps else float("inf")
+    hit = h_st["prefix_cache"]
+    h_jtok = h_st.get("energy_j", 0.0) / max(h_st["tokens_decoded"], 1)
+    p_jtok = p_st.get("energy_j", 0.0) / max(p_st["tokens_decoded"], 1)
+    rows.record("serve/prefix_cold", p_st["wall_s"],
+                f"{p_tps:.1f}tok/s_e2e;"
+                f"prefill_computed={p_st['prefill_tokens_computed']};"
+                f"{p_jtok:.3f}J/token",
+                compiles=p_st["prefill_compiles"])
+    # hit_rate rides in the JSON row: the cross-run gate fails on any
+    # decrease (a sharing regression wastes prefill joules silently)
+    rows.record("serve/prefix_cached", h_st["wall_s"],
+                f"{h_tps:.1f}tok/s_e2e;speedup={prefix_speedup:.2f}x;"
+                f"hit_rate={hit['hit_rate']:.2f};"
+                f"prefill_computed={h_st['prefill_tokens_computed']};"
+                f"{h_jtok:.3f}J/token",
+                compiles=h_st["prefill_compiles"],
+                hit_rate=hit["hit_rate"])
     rows.dump(args.json)
     print(f"\nstatic    : {s_tokens:.0f} tokens in {s_dec*1e3:.0f} ms decode "
           f"({s_tps:.1f} tok/s)")
@@ -176,6 +257,20 @@ def main(argv=None):
           f"(buckets={b_st['prefill_buckets']}), {b_tps:.1f} tok/s end-to-end")
     print(f"  bucketing speedup: {bucket_speedup:.2f}x "
           f"({'PASS' if bucket_speedup >= 2.0 else 'FAIL'} >= 2x gate)")
+    print(f"\nshared-prefix scenario ({args.prefix_requests} requests, "
+          f"{args.prefix_len}-token shared prefix, "
+          f"{args.prefix_tail}-token tails, kv block "
+          f"{h_st['kv_block_size']}):")
+    print(f"  prefix cache off: {p_st['prefill_tokens_computed']} prefill "
+          f"tokens computed / {p_st['prompt_tokens']} served, "
+          f"{p_tps:.1f} tok/s e2e, {p_jtok:.3f} J/token")
+    print(f"  prefix cache on : {h_st['prefill_tokens_computed']} prefill "
+          f"tokens computed / {h_st['prompt_tokens']} served "
+          f"(hit rate {hit['hit_rate']:.0%}, "
+          f"{hit['cached_tokens']} tokens cached), "
+          f"{h_tps:.1f} tok/s e2e, {h_jtok:.3f} J/token")
+    print(f"  prefix-cache speedup: {prefix_speedup:.2f}x "
+          f"({'PASS' if prefix_speedup >= 2.0 else 'FAIL'} >= 2x gate)")
     print("\nper-request energy (tag-bus attribution):")
     for r in c_reqs:
         print(f"  req {r.req_id:2d}: {len(r.output):2d} tokens  "

@@ -8,7 +8,11 @@ uploaded artifact and fails (exit 1) on:
 - ANY increase in a row's ``compiles`` field — compile counts are a serving
   invariant (prefill executables are bounded by the bucket count), so a
   single new executable means some change reintroduced a retrace and is
-  silently burning watts on XLA compilation instead of tokens.
+  silently burning watts on XLA compilation instead of tokens, or
+- ANY decrease in a row's ``hit_rate`` field — the prefix-cache hit rate on
+  the shared-prefix workload is deterministic, so a drop means a sharing
+  regression (trie matching, block refcounts, admission) is silently
+  recomputing prefill work the cache used to serve for free.
 
 Rows carrying a ``compiles`` field are *only* gated on the compile count:
 their wall time is cold-compile-dominated by design, which swings well past
@@ -62,6 +66,12 @@ def diff_rows(name, prev, cur, threshold):
                 f"{name}:{row}: compile count regressed "
                 f"{p_comp} -> {c_comp} (any increase fails: a retrace "
                 f"was reintroduced)")
+        p_hit, c_hit = p.get("hit_rate"), c.get("hit_rate")
+        if p_hit is not None and c_hit is not None and c_hit < p_hit - 1e-6:
+            failures.append(
+                f"{name}:{row}: prefix-cache hit rate regressed "
+                f"{p_hit:.3f} -> {c_hit:.3f} (any decrease fails: a "
+                f"sharing regression is recomputing cached prefill work)")
     for row in sorted(set(cur) - set(prev)):
         print(f"  [new row, not gated] {name}:{row}")
     for row in sorted(set(prev) - set(cur)):

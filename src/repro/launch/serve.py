@@ -38,10 +38,22 @@ def main(argv=None):
                          "edges, bounded prefill compiles), 'off' (exact "
                          "lengths, one executable per distinct length), or "
                          "explicit comma-separated edges like '8,16,32'")
+    ap.add_argument("--kv-block-size", default="auto",
+                    help="paged KV cache block size (continuous engine): "
+                         "'auto' (largest power-of-two <= 32 dividing "
+                         "max-seq; falls back to contiguous for model "
+                         "families that cannot page), 'off' (contiguous "
+                         "per-slot cache), or an explicit size dividing "
+                         "max-seq")
+    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+                    help="radix prefix cache over prompt blocks (requires "
+                         "paged KV): shared prompt prefixes prefill once")
     args = ap.parse_args(argv)
     buckets = (args.prefill_buckets
                if args.prefill_buckets in ("auto", "off")
                else [int(b) for b in args.prefill_buckets.split(",")])
+    kv_block = (args.kv_block_size if args.kv_block_size in ("auto", "off")
+                else int(args.kv_block_size))
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     model = build_model(cfg, q_block=min(64, args.prompt_len))
@@ -72,7 +84,9 @@ def main(argv=None):
         engine = ContinuousEngine(model, params, batch_size=args.batch,
                                   max_seq=args.max_seq,
                                   power_cap_w=args.power_cap,
-                                  prefill_buckets=buckets)
+                                  prefill_buckets=buckets,
+                                  kv_block_size=kv_block,
+                                  prefix_cache=args.prefix_cache == "on")
         stats = engine.serve(reqs)
 
     print(f"arch={cfg.name} engine={args.engine} reqs={args.requests} "
@@ -82,6 +96,13 @@ def main(argv=None):
     print(f"compiles: prefill={stats['prefill_compiles']} "
           f"decode={stats['decode_compiles']} "
           f"buckets={list(engine.buckets) if engine.buckets else 'off'}")
+    if stats.get("kv_block_size"):
+        pc = stats.get("prefix_cache")
+        pc_str = (f" prefix-cache hit-rate={pc['hit_rate']:.0%} "
+                  f"cached-tokens={pc['cached_tokens']}" if pc else "")
+        print(f"paged-kv: block={stats['kv_block_size']} "
+              f"peak-blocks={stats['kv_pages']['peak_used']}/"
+              f"{stats['kv_pages']['total_blocks']}{pc_str}")
     if engine.tel is not None:
         # full-session telemetry report from the unified API
         rep = engine.tel.session.report(tokens=stats.get("tokens_decoded"))

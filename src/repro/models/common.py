@@ -392,6 +392,92 @@ def gather_cache_slot(caches, slot, batch_axis=1):
         lambda c: lax.dynamic_slice_in_dim(c, slot, 1, batch_axis), caches)
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache indirection (serve.paging owns the block bookkeeping)
+#
+# The physical pool stores fixed-size KV blocks: each leaf is
+# [L, P, block, kvh, dh] — a contiguous cache whose "batch" axis is the
+# block id and whose seq axis is block_size positions. A slot's logical
+# cache is defined by its block table (an [NB] row of block ids): logical
+# position t lives in pool block ``table[t // block]`` at offset
+# ``t % block``. Gathering a table therefore reconstructs a contiguous
+# [L, B, NB*block, kvh, dh] view bit-identical to the per-slot cache the
+# unpaged steps use — which is exactly the bit-exactness contract the
+# paged serving steps are property-tested against.
+
+
+def paged_gather(pool, tables):
+    """Materialize logical cache views through block tables.
+
+    pool leaves: [L, P, block, kvh, dh]; tables: [B, NB] int32 block ids.
+    Returns leaves [L, B, NB*block, kvh, dh] — the per-slot contiguous view
+    the unmodified model decode/prefill runs on.
+    """
+    def g(c):
+        v = jnp.take(c, tables, axis=1)          # [L, B, NB, block, ...]
+        return v.reshape(v.shape[0], tables.shape[0], -1, *v.shape[4:])
+    return jax.tree.map(g, pool)
+
+
+def paged_scatter_block(pool, view, tables, pos):
+    """Write back, per batch row, the single block containing ``pos``.
+
+    Decode mutates exactly one position per slot, so only the touched block
+    needs to return to the pool. ``pos``: [B] int32 per-slot positions.
+    Free slots point at the reserved null block; their duplicate scatter
+    indices collide there harmlessly (the null block is never read).
+    """
+    b = tables.shape[0]
+    bidx = jnp.arange(b)
+
+    def s(c, v):
+        blk_size = c.shape[2]
+        blk = pos // blk_size
+        vr = v.reshape(v.shape[0], b, -1, blk_size, *v.shape[3:])
+        touched = vr[:, bidx, blk]               # [L, B, block, ...]
+        return c.at[:, tables[bidx, blk]].set(touched)
+    return jax.tree.map(s, pool, view)
+
+
+def paged_scatter_slot(pool, view, table_row):
+    """Write a batch-1 logical view back through one slot's block table.
+
+    Used after a slot prefill: every view block returns to its pool block.
+    Shared prefix blocks are rewritten with the identical bytes the gather
+    read (prefill only mutates positions >= its start offset), so other
+    owners observe no change; unallocated tail entries scatter into the
+    null block.
+    """
+    def s(c, v):
+        blk_size = c.shape[2]
+        vr = v.reshape(v.shape[0], -1, blk_size, *v.shape[3:])
+        return c.at[:, table_row].set(vr)
+    return jax.tree.map(s, pool, view)
+
+
+def reset_cache_blocks(pool, blocks):
+    """Zero a batch of pool blocks (freed-block scrubbing).
+
+    ``blocks``: [K] int32 block ids, padded with the null block id (0) —
+    duplicate indices are fine, the scatter just re-zeroes. Keeping freed
+    blocks zeroed preserves the invariant that a paged pool is bit-identical
+    to a contiguous cache whose slot rows reset on release.
+    """
+    def z(c):
+        shape = (c.shape[0], blocks.shape[0]) + c.shape[2:]
+        return c.at[:, blocks].set(jnp.zeros(shape, c.dtype))
+    return jax.tree.map(z, pool)
+
+
+def copy_cache_block(pool, src, dst):
+    """Copy one pool block (copy-on-write): dst <- src across every leaf.
+    ``src``/``dst`` may be traced scalars."""
+    def cp(c):
+        blk = lax.dynamic_slice_in_dim(c, src, 1, 1)
+        return lax.dynamic_update_slice_in_dim(c, blk, dst, 1)
+    return jax.tree.map(cp, pool)
+
+
 def scatter_cache_slot(caches, update, slot, batch_axis=1):
     """Write a batch-1 cache pytree back into one batch row."""
     return jax.tree.map(

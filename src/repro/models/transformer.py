@@ -331,18 +331,31 @@ class DecoderLM:
             return {"global": (ax, ax), "local": (axl, axl)}
         return (ax, ax)
 
-    def prefill(self, params, batch, caches, true_len=None):
-        """Prefill: writes KV caches at [0, S); returns (logits_last, caches).
+    def prefill(self, params, batch, caches, true_len=None, start_pos=None):
+        """Prefill: writes KV caches at [start, start+S); returns
+        (logits_last, caches).
 
         true_len: optional traced scalar for bucketed (right-padded)
         prompts — window ring caches are built from the true last token and
         the returned logits come from position ``true_len - 1`` instead of
         the pad tail. Cache positions >= true_len still hold pad KV; the
-        serving steps zero them via ``common.mask_cache_tail``."""
+        serving steps zero them via ``common.mask_cache_tail``.
+
+        start_pos: optional traced scalar offsetting the chunk (paged
+        serving's prefix-cache tail prefill): token i of the batch sits at
+        absolute position ``start_pos + i``, attends causally over the
+        cache prefix [0, start_pos) already in ``caches`` plus itself, and
+        ``true_len`` stays chunk-relative. Windowed ring caches can't
+        resume a ring mid-stream, so chunked prefill is flat-cache only."""
+        if start_pos is not None:
+            assert not isinstance(caches, dict), (
+                "chunked prefill (start_pos) is not supported for "
+                "local:global window ring caches")
         x = self._inputs_to_h(batch, params)
-        positions = jnp.arange(x.shape[1])
+        offset = jnp.int32(0) if start_pos is None else start_pos
+        positions = jnp.arange(x.shape[1]) + offset
         x, caches, _ = self._run_stack(x, params, positions=positions,
-                                       caches=caches, cache_pos=0,
+                                       caches=caches, cache_pos=offset,
                                        true_len=true_len)
         if true_len is None:
             last = x[:, -1:]

@@ -41,11 +41,15 @@ from repro.core.hw import DeviceSpec, TPU_V5E
 from repro.core.scheduler import ThroughputStats
 from repro.core.tags import N_GPIO
 from repro.models.common import reset_cache_slot
+from repro.serve.paging import (PagePool, RadixPrefixCache,
+                                resolve_kv_block_size)
 from repro.serve.queue import AdmissionController, Request, RequestQueue
 from repro.serve.slots import SlotManager
 from repro.serve.step import (TraceStats, bucket_for, counting_jit,
-                              make_decode_step, make_prefill_step,
-                              make_slot_prefill, pad_to_bucket)
+                              make_block_ops, make_decode_step,
+                              make_paged_decode_step, make_paged_slot_prefill,
+                              make_prefill_step, make_slot_prefill,
+                              pad_to_bucket)
 from repro.serve.step import prefill_buckets as auto_prefill_buckets
 from repro.telemetry import ModelSource, MonitorSession
 
@@ -63,6 +67,22 @@ def supports_bucketed_prefill(model) -> bool:
     except (TypeError, ValueError):
         return False
     return "true_len" in sig.parameters
+
+
+def supports_paged_cache(model) -> bool:
+    """True when the model can serve through a paged KV pool: flat stacked
+    (k, v) caches plus chunked prefill (``start_pos``). The gemma3
+    local:global families keep window *ring* caches — a ring can't resume
+    mid-stream, so they stay on the contiguous per-slot path; recurrent
+    families carry state, not KV, and can't page at all."""
+    try:
+        sig = inspect.signature(model.prefill)
+    except (TypeError, ValueError):
+        return False
+    if "start_pos" not in sig.parameters:
+        return False
+    sds = jax.eval_shape(lambda: model.init_cache(1, 8))
+    return not isinstance(sds, dict)
 
 
 def resolve_buckets(spec, max_seq: int, model=None):
@@ -129,24 +149,33 @@ class EngineTelemetry:
         return f"s{slot_index % self.n_slot_tags}"
 
     def record(self, phase: str, wall_s: float, n_tokens: int,
-               slot_to_req: Dict[int, Request]):
+               slot_to_req: Dict[int, Request],
+               extra: Optional[Dict] = None):
         """Sample ``wall_s`` of board power under ``phase`` + slot tags and
         attribute each sample's energy to the requests owning the slots
         (vectorized bitmask share computation on the columnar block).
 
         ``session.sample`` keeps windows on the global 1-kHz grid, so
         sub-millisecond steps carry their fraction into the next window
-        instead of silently dropping energy."""
+        instead of silently dropping energy. ``n_tokens`` is the *computed*
+        token count — a prefix-cache-served span burns no board time, so the
+        engine passes only the recomputed tail and shared-prefix joules are
+        attributed once, to the request that actually computed them.
+        ``extra`` (e.g. ``{"cached_tokens": ...}``) is merged into the event
+        log entry for replay/analysis."""
         if wall_s <= 0:
             return None
         self.source.set_step(n_tokens, wall_s, t0=self.session.cursor)
         tag_groups: Dict[str, List[Request]] = {}
         for idx, req in slot_to_req.items():
             tag_groups.setdefault(self.slot_tag(idx), []).append(req)
-        self.events.append({
+        event = {
             "phase": phase, "wall_s": wall_s, "n_tokens": n_tokens,
             "groups": {tg: [r.req_id for r in reqs]
-                       for tg, reqs in tag_groups.items()}})
+                       for tg, reqs in tag_groups.items()}}
+        if extra:
+            event.update(extra)
+        self.events.append(event)
         try:
             block = self.session.sample(wall_s,
                                         tags=[phase] + sorted(tag_groups))
@@ -321,19 +350,45 @@ class ContinuousEngine:
     def __init__(self, model, params, *, batch_size: int, max_seq: int,
                  telemetry: bool = True, dev: DeviceSpec = TPU_V5E,
                  power_cap_w: Optional[float] = None, greedy: bool = True,
-                 prefill_buckets="auto"):
+                 prefill_buckets="auto", kv_block_size="auto",
+                 prefix_cache: bool = True,
+                 kv_pool_blocks: Optional[int] = None):
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.max_seq = max_seq
         self.buckets = resolve_buckets(prefill_buckets, max_seq, model)
         self.trace_stats = TraceStats()
-        self._decode = counting_jit(make_decode_step(model, greedy),
-                                    "decode", self.trace_stats,
-                                    on_compile=self._on_compile)
-        self._prefill_slot = counting_jit(
-            make_slot_prefill(model, bucketed=bool(self.buckets)),
-            "prefill", self.trace_stats, on_compile=self._on_compile)
+        # paged KV: the cache is a pool of fixed-size blocks shared by all
+        # slots through per-slot block tables (gather/scatter indirection in
+        # the jitted steps). "auto" degrades to the contiguous per-slot path
+        # for families that can't page (window rings, recurrent state).
+        self.block_size = resolve_kv_block_size(
+            kv_block_size, max_seq, supports_paged_cache(model))
+        if self.block_size:
+            self.n_slot_blocks = max_seq // self.block_size
+            n_blocks = (kv_pool_blocks if kv_pool_blocks is not None
+                        else batch_size * self.n_slot_blocks + 1)
+            self.pages = PagePool(batch_size, self.n_slot_blocks, n_blocks,
+                                  self.block_size)
+            self.prefix = (RadixPrefixCache(self.block_size, self.pages)
+                           if prefix_cache else None)
+            self._decode = counting_jit(
+                make_paged_decode_step(model, greedy), "decode",
+                self.trace_stats, on_compile=self._on_compile)
+            self._prefill_slot = counting_jit(
+                make_paged_slot_prefill(model, bucketed=bool(self.buckets)),
+                "prefill", self.trace_stats, on_compile=self._on_compile)
+            self._zero_blocks, self._copy_block = make_block_ops()
+        else:
+            self.pages = None
+            self.prefix = None
+            self._decode = counting_jit(make_decode_step(model, greedy),
+                                        "decode", self.trace_stats,
+                                        on_compile=self._on_compile)
+            self._prefill_slot = counting_jit(
+                make_slot_prefill(model, bucketed=bool(self.buckets)),
+                "prefill", self.trace_stats, on_compile=self._on_compile)
         self._reset_slot = jax.jit(reset_cache_slot)
         self.pm = ServePowerModel(
             _count_params(params), dev=dev,
@@ -350,6 +405,8 @@ class ContinuousEngine:
         self._decode_s = 0.0
         self._prefill_s = 0.0
         self._decode_steps = 0
+        self._prefill_computed = 0   # prompt tokens actually run (cache
+                                     # hits excluded; bucket pad excluded)
 
     def _on_compile(self, name: str):
         if self.tel is not None:
@@ -358,10 +415,15 @@ class ContinuousEngine:
     # -- request intake ------------------------------------------------------
 
     def submit(self, req: Request):
-        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+        """Queue a request. The prompt must leave at least one decode
+        position; a generation budget that would overrun the cache is
+        accepted — the request finishes early with reason "capacity" when
+        it hits the last position (the old behavior silently clamped the
+        position and overwrote the final KV entry every step)."""
+        if len(req.prompt) + 1 > self.max_seq:
             raise ValueError(
-                f"request {req.req_id}: prompt({len(req.prompt)}) + "
-                f"max_new({req.max_new_tokens}) exceeds max_seq={self.max_seq}")
+                f"request {req.req_id}: prompt of {len(req.prompt)} leaves "
+                f"no decode position with max_seq={self.max_seq}")
         self.queue.push(req)
 
     # -- slot lifecycle ------------------------------------------------------
@@ -371,9 +433,67 @@ class ContinuousEngine:
         req.done = True
         req.finish_reason = reason
         self.finished.append(req)
-        # recycle: zero the slot's cache rows so the next occupant starts clean
-        self.caches = self._reset_slot(self.caches, jnp.int32(slot.index))
+        if self.pages is not None:
+            # drop the slot's block refs; blocks whose refcount hits zero
+            # queue for scrubbing and are re-zeroed before any realloc, so
+            # the pool stays bit-identical to a contiguous cache whose slot
+            # rows are reset on release
+            self.pages.release_slot(slot.index)
+        else:
+            # recycle: zero the slot's cache rows so the next occupant
+            # starts clean
+            self.caches = self._reset_slot(self.caches, jnp.int32(slot.index))
         self.slots.release(slot)
+
+    # -- paged-pool bookkeeping ----------------------------------------------
+
+    def _flush_freed(self):
+        """Scrub freed blocks before any realloc. Fixed-width chunks (padded
+        with the null block) keep the jitted zero-kernel at one executable."""
+        pending = self.pages.drain_pending_zero()
+        if not pending:
+            return
+        width = self.n_slot_blocks
+        for i in range(0, len(pending), width):
+            chunk = pending[i:i + width]
+            chunk = chunk + [PagePool.NULL] * (width - len(chunk))
+            self.caches = self._zero_blocks(self.caches,
+                                            jnp.asarray(chunk, jnp.int32))
+
+    def _alloc_block(self) -> Optional[int]:
+        """One zeroed block, evicting cold prefix-cache entries if the free
+        list is dry. Returns None only when every block is live."""
+        self._flush_freed()
+        blk = self.pages.alloc()
+        if blk is None and self.prefix is not None:
+            if self.prefix.evict(1):
+                self._flush_freed()
+                blk = self.pages.alloc()
+        return blk
+
+    def _expected_cached(self, req: Request) -> int:
+        """Prompt span the prefix cache would serve right now (probe only —
+        no refcounts touched, no LRU update). Used to price queued work."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.probe(np.asarray(req.prompt, np.int32))
+
+    def _can_admit_pages(self, req: Request) -> bool:
+        """Head-of-line page check: admit only when the pool can cover the
+        request's worst-case footprint (prompt + budget, capped at max_seq)
+        net of the blocks a prefix-cache hit would share. Evictable trie
+        blocks count as available — ``_alloc_block`` reclaims them on
+        demand. Deferring (not shedding) preserves FIFO order; pages free
+        as active requests finish."""
+        if self.pages is None:
+            return True
+        span = min(len(req.prompt) + req.max_new_tokens, self.max_seq)
+        needed = self.pages.blocks_for(span) \
+            - self._expected_cached(req) // self.block_size
+        available = self.pages.free_blocks()
+        if self.prefix is not None:
+            available += self.prefix.evictable_blocks()
+        return needed <= available
 
     def _emit(self, slot, tok: int):
         req = slot.req
@@ -388,7 +508,10 @@ class ContinuousEngine:
         """TTL shedding: a queued request's predicted wait is the remaining
         decode budget ahead of it (active slots + queue positions in front)
         cleared at the measured decode rate, plus the queued prompts ahead
-        cleared at the measured prefill rate."""
+        cleared at the measured prefill rate. Prompts are priced net of the
+        span the prefix cache is expected to serve — a warm shared prefix
+        costs no prefill compute, and pricing it gross sheds requests that
+        would easily meet their TTL."""
         if not self.queue:
             return
         ahead = sum(s.req.max_new_tokens - s.req.n_generated
@@ -402,10 +525,14 @@ class ContinuousEngine:
                 # budget (decode) — tracked separately so each phase is
                 # priced at its own measured rate
                 ahead += req.max_new_tokens
-                ahead_prefill += len(req.prompt)
+                ahead_prefill += max(
+                    0, len(req.prompt) - self._expected_cached(req))
 
     def _admit(self):
-        """Fill free slots from the queue, subject to the admission policy."""
+        """Fill free slots from the queue, subject to the admission policy
+        (power cap, TTL) and — when paged — page availability: a request is
+        admitted only if the pool can back its worst-case footprint, else
+        admission defers until active requests free pages."""
         self._shed_stale()
         while self.queue and self.slots.free_slots():
             if self.admission.max_slots(self.batch_size) == 0:
@@ -414,6 +541,8 @@ class ContinuousEngine:
                 break
             if not self.admission.admit(self.slots.n_active, self.batch_size):
                 break                     # defer under the power cap
+            if not self._can_admit_pages(self.queue.peek()):
+                break                     # defer until pages free up
             req = self.queue.pop()
             if req.max_new_tokens <= 0:
                 req.done = True
@@ -425,32 +554,103 @@ class ContinuousEngine:
     def _prefill_into(self, slot, req: Request):
         prompt = np.asarray(req.prompt, np.int32)
         t0 = time.perf_counter()
-        if self.buckets:
-            padded, n = pad_to_bucket(prompt, self.buckets)
-            next_tok, _, self.caches = self._prefill_slot(
-                self.params, jnp.asarray(padded[None, :]), jnp.int32(n),
-                jnp.int32(slot.index), self.caches)
+        if self.pages is not None:
+            cached, tail_len = self._prefill_paged(slot, req, prompt)
+            if cached is None:
+                return                   # pool dry: request finished "pages"
         else:
-            next_tok, _, self.caches = self._prefill_slot(
-                self.params, jnp.asarray(prompt[None, :]),
-                jnp.int32(slot.index), self.caches)
-        first = int(np.asarray(next_tok)[0, 0])
+            cached, tail_len = 0, len(prompt)
+            if self.buckets:
+                padded, n = pad_to_bucket(prompt, self.buckets)
+                next_tok, _, self.caches = self._prefill_slot(
+                    self.params, jnp.asarray(padded[None, :]), jnp.int32(n),
+                    jnp.int32(slot.index), self.caches)
+            else:
+                next_tok, _, self.caches = self._prefill_slot(
+                    self.params, jnp.asarray(prompt[None, :]),
+                    jnp.int32(slot.index), self.caches)
+            self._first_tok = int(np.asarray(next_tok)[0, 0])
+        first = self._first_tok
         dt = time.perf_counter() - t0
         req.prefill_s = dt
+        req.cached_prompt_tokens = cached
         self._prefill_s += dt
-        self.stats.observe("prefill", len(req.prompt), dt)
+        self._prefill_computed += tail_len
+        # throughput + energy see only the *computed* tail: cached tokens
+        # burn no board time, so shared-prefix joules are attributed once —
+        # to the request that actually ran the prefill
+        self.stats.observe("prefill", tail_len, dt)
         if self.tel:
-            self.tel.record("prefill", dt, len(req.prompt), {slot.index: req})
+            self.tel.record("prefill", dt, tail_len, {slot.index: req},
+                            extra={"cached_tokens": cached} if cached else None)
         self.slots.assign(slot, req, first)
         self._emit(slot, first)   # prefill samples the first token
 
+    def _prefill_paged(self, slot, req: Request, prompt: np.ndarray):
+        """Paged prefill: map the matched prefix (zero compute), allocate
+        blocks for the unmatched prompt span, run a chunked prefill over
+        the tail only, then offer the full prompt blocks to the trie. Returns ``(cached_tokens, tail_len)`` or
+        ``(None, 0)`` when the pool is dry (request finished, reason
+        "pages" — only possible with an explicitly undersized pool; the
+        admission check covers the default sizing)."""
+        matched = (self.prefix.match(prompt)
+                   if self.prefix is not None else [])
+        if matched:
+            self.pages.map_shared(slot.index, matched)
+        start = len(matched) * self.block_size
+        # back only the prompt here; decode grows the table block-by-block
+        # (``ensure_writable``) so a request that stops early never claims
+        # its worst-case footprint — the admission check already reserved
+        # headroom for it
+        if not self.pages.ensure_capacity(slot.index, len(prompt),
+                                          self._alloc_block):
+            self.pages.release_slot(slot.index)
+            req.done = True
+            req.finish_reason = "pages"
+            self.finished.append(req)
+            return None, 0
+        tail = prompt[start:]
+        table_row = jnp.asarray(self.pages.table_row(slot.index))
+        if self.buckets:
+            padded, n = pad_to_bucket(tail, self.buckets)
+            next_tok, _, self.caches = self._prefill_slot(
+                self.params, jnp.asarray(padded[None, :]), jnp.int32(n),
+                jnp.int32(start), table_row, self.caches)
+        else:
+            next_tok, _, self.caches = self._prefill_slot(
+                self.params, jnp.asarray(tail[None, :]), jnp.int32(start),
+                table_row, self.caches)
+        self._first_tok = int(np.asarray(next_tok)[0, 0])
+        if self.prefix is not None:
+            self.prefix.insert(prompt, self.pages.table_row(slot.index))
+        return start, len(tail)
+
     def _decode_once(self):
+        if self.pages is not None:
+            # back every active slot's write position before the fused step:
+            # fresh block on a boundary, COW if (defensively) shared, finish
+            # "pages" when the pool is dry
+            for s in list(self.slots.active_slots()):
+                state, src, dst = self.pages.ensure_writable(
+                    s.index, s.pos, self._alloc_block)
+                if state == "cow":
+                    self.caches = self._copy_block(
+                        self.caches, jnp.int32(src), jnp.int32(dst))
+                elif state == "oom":
+                    self._finish(s, "pages")
         active = self.slots.active_slots()
+        if not active:
+            return
         tokens = jnp.asarray(self.slots.batch_tokens())
         pos = jnp.asarray(self.slots.batch_positions())
         t0 = time.perf_counter()
-        next_tok, _, self.caches = self._decode(self.params, tokens, pos,
-                                                self.caches)
+        if self.pages is not None:
+            tables = jnp.asarray(self.pages.tables)
+            next_tok, _, self.caches = self._decode(self.params, tokens, pos,
+                                                    tables, self.caches)
+        else:
+            next_tok, _, self.caches = self._decode(self.params, tokens, pos,
+                                                    self.caches)
         toks = np.asarray(next_tok)          # one host sync per step
         dt = time.perf_counter() - t0
         self._decode_s += dt
@@ -464,13 +664,25 @@ class ContinuousEngine:
             tok = int(toks[s.index, 0])
             self.slots.advance(s, tok)
             self._emit(s, tok)
+            # the clamp fix: a request that filled the cache finishes here
+            # instead of silently overwriting the last KV position forever
+            if s.req is not None and self.slots.at_capacity(s):
+                self._finish(s, "capacity")
 
     # -- driver --------------------------------------------------------------
 
     def run(self) -> Dict:
         """Drain the queue; returns aggregate + per-request stats."""
         if self.caches is None:
-            self.caches = self.model.init_cache(self.batch_size, self.max_seq)
+            if self.pages is not None:
+                # the "batch" axis of the cache is the POOL of blocks, each
+                # block_size positions long; slots see contiguous views
+                # through their block tables
+                self.caches = self.model.init_cache(self.pages.n_blocks,
+                                                    self.block_size)
+            else:
+                self.caches = self.model.init_cache(self.batch_size,
+                                                    self.max_seq)
         while True:
             self._admit()
             if self.slots.n_active == 0:
@@ -487,13 +699,21 @@ class ContinuousEngine:
                                  if self._decode_s else 0.0),
             "prefills": self.slots.n_assigned,
             "prompt_tokens": self.slots.n_prefill_tokens,
+            "prefill_tokens_computed": self._prefill_computed,
             "slots_recycled": self.slots.n_released,
             "peak_active": self.slots.peak_active,
             "dvfs_f_ghz": self.dvfs.f_ghz if self.dvfs else None,
             "prefill_compiles": self.trace_stats.compiles("prefill"),
             "decode_compiles": self.trace_stats.compiles("decode"),
             "prefill_buckets": list(self.buckets) if self.buckets else None,
+            "kv_block_size": self.block_size,
         }
+        if self.pages is not None:
+            pg = self.pages.stats.as_dict()
+            pg["free_blocks"] = self.pages.free_blocks()
+            stats["kv_pages"] = pg
+        if self.prefix is not None:
+            stats["prefix_cache"] = self.prefix.stats.as_dict()
         if self.tel:
             stats.update(self.tel.energy_stats())
         return stats
@@ -517,8 +737,17 @@ class ContinuousEngine:
         self._decode_s = 0.0
         self._prefill_s = 0.0
         self._decode_steps = 0
+        self._prefill_computed = 0
         self.queue = RequestQueue()
         self.slots = SlotManager(self.batch_size, self.max_seq)
+        if self.prefix is not None:
+            # cold prefix cache: a benchmark's measured phase must not reap
+            # hits the warmup planted (the warmup's *compiles* are exactly
+            # what reset keeps — same policy as trace_stats below)
+            self.prefix.clear()
+        if self.pages is not None:
+            self.pages.stats = type(self.pages.stats)(
+                total_blocks=self.pages.stats.total_blocks)
         if self.tel:
             self.tel.session.reset()
             self.tel.events = []       # event log tracks the sample stream

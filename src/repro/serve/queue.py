@@ -33,10 +33,11 @@ class Request:
     ttl_s: Optional[float] = None   # shed if predicted wait exceeds this
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    finish_reason: str = ""         # "length" | "eos" | "shed"
+    finish_reason: str = ""   # "length" | "eos" | "shed" | "capacity" | "pages"
     energy_j: float = 0.0
     prefill_s: float = 0.0
     decode_steps: int = 0
+    cached_prompt_tokens: int = 0   # prompt span served from the prefix cache
 
     @property
     def n_generated(self) -> int:
@@ -71,11 +72,20 @@ class RequestQueue:
         except ValueError:
             pass    # already popped (e.g. shed straight from a pop())
 
-    def queued_tokens(self) -> int:
+    def queued_tokens(self, cached_tokens_fn=None) -> int:
         """Token budget waiting in the queue (admission wait estimate):
         prompt tokens still to prefill plus the generation budget — counting
-        only ``max_new_tokens`` undercounts the wait and sheds too late."""
-        return sum(len(r.prompt) + r.max_new_tokens for r in self._q)
+        only ``max_new_tokens`` undercounts the wait and sheds too late.
+
+        ``cached_tokens_fn(req)`` (optional) returns the prompt span the
+        prefix cache is expected to serve without compute; pricing queued
+        prompts gross of cache hits over-sheds warm-prefix traffic, so the
+        engine passes its prefix-cache probe here."""
+        if cached_tokens_fn is None:
+            return sum(len(r.prompt) + r.max_new_tokens for r in self._q)
+        return sum(
+            max(0, len(r.prompt) - cached_tokens_fn(r)) + r.max_new_tokens
+            for r in self._q)
 
     def snapshot(self) -> List[Request]:
         """Queue contents in FIFO order (for shed walks)."""

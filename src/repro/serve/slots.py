@@ -54,11 +54,14 @@ class SlotManager:
 
         ``slot.pos`` is always the TRUE prompt length: a bucketed prefill
         right-pads to its bucket edge but scatters only the real prefix, so
-        decode resumes at the true position, not the padded one."""
+        decode resumes at the true position, not the padded one. The prompt
+        must leave at least one decode position; a generation budget beyond
+        capacity is fine — the engine finishes the request at capacity
+        (``at_capacity``) instead of truncating the budget up front."""
         assert slot.free, f"slot {slot.index} busy"
-        assert len(req.prompt) + req.max_new_tokens <= self.max_seq, (
-            f"request {req.req_id} needs {len(req.prompt) + req.max_new_tokens}"
-            f" cache positions, slot holds {self.max_seq}")
+        assert len(req.prompt) < self.max_seq, (
+            f"request {req.req_id}: prompt of {len(req.prompt)} leaves no "
+            f"decode position in a {self.max_seq}-position cache")
         slot.req = req
         slot.pos = len(req.prompt)
         slot.last_token = first_token
@@ -67,9 +70,20 @@ class SlotManager:
         self.peak_active = max(self.peak_active, self.n_active)
 
     def advance(self, slot: Slot, token: int):
-        """Record one decoded token: the fed token landed at ``pos``."""
-        slot.pos = min(slot.pos + 1, self.max_seq - 1)
+        """Record one decoded token: the fed token landed at ``pos``.
+
+        ``pos`` is NOT clamped at ``max_seq - 1``: clamping silently
+        overwrote the last KV position every subsequent step (stale
+        attention, corrupted cache). The engine checks ``at_capacity`` after
+        each advance and finishes the request (finish_reason "capacity")
+        instead of letting it wrap."""
+        slot.pos += 1
         slot.last_token = token
+
+    def at_capacity(self, slot: Slot) -> bool:
+        """True when the next decode would write past the cache: the
+        request must finish now (finish_reason "capacity")."""
+        return slot.pos > self.max_seq - 1
 
     def release(self, slot: Slot):
         slot.req = None

@@ -32,8 +32,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import (gather_cache_slot, mask_cache_tail,
-                                 scatter_cache_slot)
+from repro.models.common import (copy_cache_block, gather_cache_slot,
+                                 mask_cache_tail, paged_gather,
+                                 paged_scatter_block, paged_scatter_slot,
+                                 reset_cache_blocks, scatter_cache_slot)
 from repro.parallel.sharding import spec_for
 
 
@@ -235,6 +237,69 @@ def make_slot_prefill(model, bucketed: bool = False):
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, logits, scatter_cache_slot(caches, sub, slot)
     return bucketed_slot_prefill
+
+
+def make_paged_decode_step(model, greedy=True):
+    """Fused decode through block-table indirection.
+
+    The pool ([L, P, block, kvh, dh] leaves) is gathered into per-slot
+    contiguous views via ``tables`` ([B, NB] block ids), the unmodified
+    model decode runs on the view, and only each slot's touched block is
+    scattered back. Table *values* are traced, so remaps (prefix sharing,
+    COW, lazy growth) never retrace — the decode executable count stays 1.
+    """
+    def paged_decode_step(params, tokens, pos, tables, pool, key=None):
+        view = paged_gather(pool, tables)
+        logits, view = model.decode_step(params, tokens, pos, view)
+        if greedy or key is None:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            next_tok = jax.random.categorical(key, logits).astype(jnp.int32)
+        pool = paged_scatter_block(pool, view, tables, pos)
+        return next_tok, logits, pool
+    return paged_decode_step
+
+
+def make_paged_slot_prefill(model, bucketed: bool = False):
+    """Prefill one request's *uncached tail* through its block table.
+
+    ``start_pos`` (traced) is the first uncached position: the matched
+    prefix blocks already mapped into ``table_row`` supply KV for
+    [0, start_pos) with zero compute, the chunk attends causally over
+    prefix + itself, and logits come from the chunk's (true) last token.
+    Bucketed mode right-pads the tail to its bucket edge; everything at or
+    past ``start_pos + true_len`` is zeroed before the scatter so pad KV
+    and stale block contents never reach decode. Executables stay bounded
+    by the bucket count — the same compile budget as unpaged prefill.
+    """
+    if not bucketed:
+        def paged_slot_prefill(params, tokens, start_pos, table_row, pool):
+            sub = paged_gather(pool, table_row[None, :])
+            logits, sub = model.prefill(params, {"tokens": tokens}, sub,
+                                        start_pos=start_pos)
+            sub = mask_cache_tail(sub, start_pos + tokens.shape[1])
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, logits, paged_scatter_slot(pool, sub, table_row)
+        return paged_slot_prefill
+
+    def paged_bucketed_slot_prefill(params, tokens, true_len, start_pos,
+                                    table_row, pool):
+        sub = paged_gather(pool, table_row[None, :])
+        logits, sub = model.prefill(params, {"tokens": tokens}, sub,
+                                    true_len=true_len, start_pos=start_pos)
+        sub = mask_cache_tail(sub, start_pos + true_len)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, paged_scatter_slot(pool, sub, table_row)
+    return paged_bucketed_slot_prefill
+
+
+def make_block_ops():
+    """Jitted pool maintenance ops: (zero_blocks, copy_block).
+
+    ``zero_blocks(pool, blocks)`` scrubs freed blocks (fixed-width padded
+    id vector -> one executable); ``copy_block(pool, src, dst)`` is the
+    copy-on-write arm (traced scalars -> one executable)."""
+    return jax.jit(reset_cache_blocks), jax.jit(copy_cache_block)
 
 
 def serve_rules(shape):
