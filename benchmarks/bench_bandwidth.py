@@ -8,11 +8,11 @@ interpret mode and run natively only on TPU); the derived column reports
 GB/s and, for the largest buffer, the fraction of the TPU v5e HBM roofline
 the same access pattern would use.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core.tracing import TraceStats, counting_jit
 from repro.kernels.stream import ops as stream_ops
 from repro.kernels.stream import ref as stream_ref
 
@@ -21,17 +21,20 @@ COLS = 1024
 
 
 def run():
+    stats = TraceStats()
     for kb in SIZES_KB:
         rows = max(kb * 1024 // (COLS * 4), 1)
         a = jnp.asarray(np.random.default_rng(0).normal(size=(rows, COLS)),
                         jnp.float32)
         b = jnp.asarray(np.random.default_rng(1).normal(size=(rows, COLS)),
                         jnp.float32)
+        cj = lambda f, nm: counting_jit(f, f"bandwidth/{nm}", stats)
         ops = {
-            "copy": (jax.jit(stream_ref.copy), (a,)),
-            "scale": (jax.jit(lambda x: stream_ref.scale(x, 1.7)), (a,)),
-            "add": (jax.jit(stream_ref.add), (a, b)),
-            "triad": (jax.jit(lambda x, y: stream_ref.triad(x, y, 1.7)), (a, b)),
+            "copy": (cj(stream_ref.copy, "copy"), (a,)),
+            "scale": (cj(lambda x: stream_ref.scale(x, 1.7), "scale"), (a,)),
+            "add": (cj(stream_ref.add, "add"), (a, b)),
+            "triad": (cj(lambda x, y: stream_ref.triad(x, y, 1.7), "triad"),
+                      (a, b)),
         }
         for name, (fn, args) in ops.items():
             t = time_fn(fn, *args)

@@ -5,11 +5,11 @@ Gop/s on this host via XLA, plus the TPU v5e model peaks the kernels target
 (the paper's observed 2x ladder FMA->DPA2->DPA4 maps to the MXU's
 f32:bf16:int8 throughput ladder).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core.tracing import TraceStats, counting_jit
 from repro.kernels.dpa_matmul import ref as dpa_ref
 
 M = K = N = 512
@@ -21,8 +21,10 @@ def run():
     a = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
     flops = 2 * M * K * N
+    stats = TraceStats()
     for variant in ("fma_f32", "dpa2", "dpa4"):
-        fn = jax.jit(lambda x, y, v=variant: dpa_ref.matmul(x, y, v))
+        fn = counting_jit(lambda x, y, v=variant: dpa_ref.matmul(x, y, v),
+                          f"peak/{variant}", stats)
         t = time_fn(fn, a, b)
         gops = flops / t / 1e9
         emit(f"peak/{variant}/{M}x{K}x{N}", t,

@@ -241,6 +241,18 @@ def main(argv=None):
                 f"{h_jtok:.3f}J/token",
                 compiles=h_st["prefill_compiles"],
                 hit_rate=hit["hit_rate"])
+    # auxiliary executables (slot reset / block zero / block copy) are
+    # metered since they moved under counting_jit; they get their OWN row —
+    # existing rows keep their historical compile semantics, and the gate
+    # pins this one from its first appearance onward
+    aux = {}
+    for st in (c_st, h_st):
+        for nm, n in st.get("compiles", {}).items():
+            if nm not in ("prefill", "decode"):
+                aux[nm] = aux.get(nm, 0) + n
+    rows.record("serve/aux_compiles", 0.0,
+                ";".join(f"{k}={v}" for k, v in sorted(aux.items())) or "none",
+                compiles=sum(aux.values()))
     rows.dump(args.json)
     print(f"\nstatic    : {s_tokens:.0f} tokens in {s_dec*1e3:.0f} ms decode "
           f"({s_tps:.1f} tok/s)")

@@ -12,7 +12,11 @@ uploaded artifact and fails (exit 1) on:
 - ANY decrease in a row's ``hit_rate`` field — the prefix-cache hit rate on
   the shared-prefix workload is deterministic, so a drop means a sharing
   regression (trie matching, block refcounts, admission) is silently
-  recomputing prefill work the cache used to serve for free.
+  recomputing prefill work the cache used to serve for free, or
+- ANY increase in a row's ``findings`` field — the ``repro.analysis``
+  linter (``--gate-json``) emits one row per rule with its non-suppressed
+  finding count; an increase means a new DLK violation landed without a
+  pragma or a fix.
 
 Rows carrying a ``compiles`` field are *only* gated on the compile count:
 their wall time is cold-compile-dominated by design, which swings well past
@@ -72,6 +76,12 @@ def diff_rows(name, prev, cur, threshold):
                 f"{name}:{row}: prefix-cache hit rate regressed "
                 f"{p_hit:.3f} -> {c_hit:.3f} (any decrease fails: a "
                 f"sharing regression is recomputing cached prefill work)")
+        p_find, c_find = p.get("findings"), c.get("findings")
+        if p_find is not None and c_find is not None and c_find > p_find:
+            failures.append(
+                f"{name}:{row}: static-analysis findings regressed "
+                f"{p_find} -> {c_find} (any increase fails: a new "
+                f"dalek-lint violation landed without a fix or pragma)")
     for row in sorted(set(cur) - set(prev)):
         print(f"  [new row, not gated] {name}:{row}")
     for row in sorted(set(prev) - set(cur)):

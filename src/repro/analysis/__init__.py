@@ -1,0 +1,21 @@
+"""dalek-lint: AST static analysis for the repo's own discipline.
+
+Importing the package registers every rule module; ``python -m
+repro.analysis`` runs the CLI. Rules (see ``--list-rules``):
+
+=======  =================  ==================================================
+DLK001   bare-jit           jax.jit outside counting_jit (compile gate blind)
+DLK002   host-sync          device->host sync inside an engine hot loop
+DLK003   traced-branch      python control flow on a traced value in jit
+DLK004   jit-kwargs         static/donate argnums wiring errors
+DLK005   untagged-energy    MonitorSession.sample with no region()/tags
+DLK006   refcount-pairing   PagePool block acquired but not consumed/released
+=======  =================  ==================================================
+"""
+from repro.analysis.core import (Finding, ModuleContext,  # noqa: F401
+                                 Rule, all_rules, analyze_paths,
+                                 analyze_source, rule_codes, select_rules)
+# importing the rule modules populates the registry
+from repro.analysis import (rules_energy, rules_host,  # noqa: F401
+                            rules_jit, rules_refcount)
+from repro.analysis.baseline import DEFAULT_BASELINE  # noqa: F401

@@ -1,0 +1,368 @@
+"""dalek-lint core: findings, the rule registry, pragma suppression, and
+the file driver.
+
+The analyzer is pure stdlib ``ast``: each rule is a class with a ``DLK###``
+code and a kebab-case slug, registered via :func:`register`, that inspects
+one :class:`ModuleContext` (parsed tree + parent links + shared caches like
+the module's jit-wrapped names) and yields :class:`Finding`s. Suppression
+is line-based pragmas::
+
+    x = np.asarray(cur)  # dalek: allow[host-sync] one fetch per step
+
+A pragma on its own comment line covers the next statement line; the token
+inside ``allow[...]`` is a rule slug, a DLK code, or ``all``. Suppressed
+findings are kept (and counted) but never fail the run — the CI gate
+regresses on the *non-suppressed* count.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+PRAGMA_RE = re.compile(r"#\s*dalek:\s*allow\[([A-Za-z0-9_,\- *]+)\]")
+
+#: basenames treated as test files (rules with ``skip_tests`` pass them by:
+#: tests jit reference computations and sync on results *by design*)
+_TEST_RE = re.compile(r"^(test_.*|conftest)\.py$")
+
+
+@dataclasses.dataclass
+class Finding:
+    code: str            # "DLK001"
+    rule: str            # "bare-jit"
+    path: str            # posix, as given on the command line
+    line: int
+    col: int
+    message: str
+    line_text: str = ""
+    suppressed: bool = False
+    baselined: bool = False
+
+    @property
+    def active(self) -> bool:
+        return not (self.suppressed or self.baselined)
+
+    @property
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def render(self) -> str:
+        note = (" (suppressed)" if self.suppressed
+                else " (baselined)" if self.baselined else "")
+        return f"{self.location}: {self.code} [{self.rule}] {self.message}{note}"
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def key(self):
+        """Baseline identity: line numbers churn, source text doesn't."""
+        return (self.code, self.path, self.line_text.strip())
+
+
+class Rule:
+    """One check. Subclasses set ``code``/``name`` and implement ``check``."""
+
+    code: str = "DLK000"
+    name: str = "unnamed"
+    #: rules that meter production discipline skip test files: tests jit
+    #: fresh references and sync on results on purpose
+    skip_tests: bool = False
+
+    def check(self, ctx: "ModuleContext") -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+REGISTRY: List[type] = []
+
+
+def register(cls):
+    REGISTRY.append(cls)
+    return cls
+
+
+def all_rules() -> List[Rule]:
+    return [cls() for cls in REGISTRY]
+
+
+def rule_codes() -> List[str]:
+    return sorted(cls.code for cls in REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by rules
+
+
+def qualname(node) -> str:
+    """Dotted source name for Name/Attribute chains ("self.pages.alloc");
+    empty string for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def root_name(node) -> str:
+    """Base variable of an expression: ``a.b[c].d`` -> "a"."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def is_jax_jit(node, ctx: "ModuleContext") -> bool:
+    """True for a reference to ``jax.jit`` (or a bare ``jit`` imported
+    from jax)."""
+    qn = qualname(node)
+    return qn == "jax.jit" or (qn == "jit" and "jit" in ctx.jax_imports)
+
+
+def is_partial_jit(call, ctx: "ModuleContext") -> bool:
+    """``functools.partial(jax.jit, ...)``."""
+    return (isinstance(call, ast.Call)
+            and qualname(call.func) in ("functools.partial", "partial")
+            and bool(call.args) and is_jax_jit(call.args[0], ctx))
+
+
+def is_counting_jit(node) -> bool:
+    qn = qualname(node)
+    return qn == "counting_jit" or qn.endswith(".counting_jit")
+
+
+def literal_names(node) -> List[str]:
+    """String literals inside a tuple/list/constant node."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def literal_ints(node) -> List[int]:
+    """Int literals inside a tuple/list/constant node."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)
+                and not isinstance(e.value, bool)]
+    return []
+
+
+class ModuleContext:
+    """One parsed module + the caches rules share."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.is_test = bool(_TEST_RE.match(Path(path).name))
+        self._parents: Dict[int, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[id(child)] = parent
+        #: names ``from jax import ...`` bound in this module
+        self.jax_imports: Set[str] = {
+            alias.asname or alias.name
+            for node in ast.walk(tree) if isinstance(node, ast.ImportFrom)
+            and node.module == "jax" for alias in node.names}
+        self._jitted_names: Optional[Set[str]] = None
+        self._functions: Optional[List[ast.FunctionDef]] = None
+
+    # -- structure -----------------------------------------------------------
+
+    def parent(self, node) -> Optional[ast.AST]:
+        return self._parents.get(id(node))
+
+    def ancestors(self, node) -> Iterator[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+    def enclosing(self, node, kinds) -> Optional[ast.AST]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, kinds):
+                return anc
+        return None
+
+    def enclosing_function(self, node):
+        return self.enclosing(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+
+    def enclosing_class(self, node) -> Optional[ast.ClassDef]:
+        return self.enclosing(node, ast.ClassDef)
+
+    @property
+    def functions(self) -> List[ast.FunctionDef]:
+        if self._functions is None:
+            self._functions = [n for n in ast.walk(self.tree)
+                               if isinstance(n, (ast.FunctionDef,
+                                                 ast.AsyncFunctionDef))]
+        return self._functions
+
+    # -- jit tracking --------------------------------------------------------
+
+    @property
+    def jitted_names(self) -> Set[str]:
+        """Plain names and attribute names bound to jit-wrapped callables
+        (``f = jax.jit(...)``, ``self._decode = counting_jit(...)``, and
+        defs decorated with ``@jax.jit``/``@partial(jax.jit, ...)``)."""
+        if self._jitted_names is not None:
+            return self._jitted_names
+        names: Set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                call = node.value
+                if (is_jax_jit(call.func, self) or is_counting_jit(call.func)
+                        or is_partial_jit(call, self)):
+                    for tgt in node.targets:
+                        for t in (tgt.elts if isinstance(tgt, ast.Tuple)
+                                  else [tgt]):
+                            if isinstance(t, ast.Name):
+                                names.add(t.id)
+                            elif isinstance(t, ast.Attribute):
+                                names.add(t.attr)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if is_jax_jit(dec, self) or is_partial_jit(dec, self):
+                        names.add(node.name)
+        self._jitted_names = names
+        return names
+
+    def calls_jitted(self, func_node: ast.FunctionDef) -> bool:
+        """Does this function directly call a known jit-wrapped name?"""
+        jitted = self.jitted_names
+        for node in ast.walk(func_node):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Name) and f.id in jitted:
+                    return True
+                if isinstance(f, ast.Attribute) and f.attr in jitted:
+                    return True
+        return False
+
+    # -- findings ------------------------------------------------------------
+
+    def finding(self, rule: Rule, node, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        text = self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        return Finding(code=rule.code, rule=rule.name, path=self.path,
+                       line=line, col=col, message=message,
+                       line_text=text)
+
+
+# ---------------------------------------------------------------------------
+# suppression pragmas
+
+
+def _pragma_rules(line: str) -> Set[str]:
+    out: Set[str] = set()
+    for m in PRAGMA_RE.finditer(line):
+        out |= {tok.strip().lower() for tok in m.group(1).split(",")
+                if tok.strip()}
+    return out
+
+
+def suppressions(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """line number (1-based) -> allowed rule tokens. A pragma on a pure
+    comment line also covers the following line."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        toks = _pragma_rules(line)
+        if not toks:
+            continue
+        out.setdefault(i, set()).update(toks)
+        if line.lstrip().startswith("#"):
+            out.setdefault(i + 1, set()).update(toks)
+    return out
+
+
+def _is_allowed(finding: Finding, allowed: Dict[int, Set[str]]) -> bool:
+    toks = allowed.get(finding.line, ())
+    return bool(toks) and ("all" in toks or "*" in toks
+                           or finding.rule in toks
+                           or finding.code.lower() in toks)
+
+
+# ---------------------------------------------------------------------------
+# driver
+
+
+def analyze_source(source: str, path: str,
+                   rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Run every (selected) rule over one module's source."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(code="DLK000", rule="parse-error", path=path,
+                        line=e.lineno or 1, col=e.offset or 0,
+                        message=f"could not parse: {e.msg}")]
+    ctx = ModuleContext(path, source, tree)
+    allowed = suppressions(ctx.lines)
+    findings: List[Finding] = []
+    seen = set()
+    for rule in (rules if rules is not None else all_rules()):
+        if rule.skip_tests and ctx.is_test:
+            continue
+        for f in rule.check(ctx):
+            # one finding per (rule, line): compound expressions (e.g.
+            # int(np.asarray(x)[0])) must not double-report
+            if (f.code, f.line) in seen:
+                continue
+            seen.add((f.code, f.line))
+            if _is_allowed(f, allowed):
+                f.suppressed = True
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return findings
+
+
+def iter_py_files(paths: Iterable[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+def select_rules(select: Optional[Iterable[str]] = None,
+                 ignore: Optional[Iterable[str]] = None) -> List[Rule]:
+    def norm(vals):
+        return {v.strip().lower() for v in vals or () if v.strip()}
+
+    sel, ign = norm(select), norm(ignore)
+
+    def match(rule, toks):
+        return rule.code.lower() in toks or rule.name in toks
+
+    rules = [r for r in all_rules() if not sel or match(r, sel)]
+    return [r for r in rules if not match(r, ign)]
+
+
+def analyze_paths(paths: Iterable[str],
+                  select: Optional[Iterable[str]] = None,
+                  ignore: Optional[Iterable[str]] = None) -> List[Finding]:
+    rules = select_rules(select, ignore)
+    findings: List[Finding] = []
+    for file in iter_py_files(paths):
+        try:
+            source = file.read_text()
+        except (OSError, UnicodeDecodeError) as e:
+            findings.append(Finding(
+                code="DLK000", rule="parse-error", path=file.as_posix(),
+                line=1, col=0, message=f"could not read: {e}"))
+            continue
+        findings.extend(analyze_source(source, file.as_posix(), rules))
+    return findings

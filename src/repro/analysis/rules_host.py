@@ -1,0 +1,115 @@
+"""DLK002 host-sync-in-hot-loop.
+
+The engines are designed around *one* host sync per step (the [B,1]
+token fetch). Any extra ``np.asarray``/``.item()``/``int()``/``float()``
+on a device value inside the step loop serializes host and device and,
+per PAPER.md, burns idle watts while the accelerator drains. The rule
+taints results of jit-wrapped calls, propagates the taint through plain
+assignments, and flags sync calls on tainted values inside a loop.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.core import (Finding, ModuleContext, Rule, qualname,
+                                 register, root_name)
+
+#: ``f(x)`` forms that copy a device value to host
+SYNC_QUALNAMES = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                  "jax.device_get", "onp.asarray"}
+#: ``x.m()`` forms that block on the device
+SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+#: builtins that concretize a scalar
+SYNC_BUILTINS = {"int", "float", "bool"}
+
+
+def _sync_call(node: ast.Call, ctx: ModuleContext):
+    """(kind, synced-expression) if this call is a host sync, else None."""
+    qn = qualname(node.func)
+    if qn in SYNC_QUALNAMES and node.args:
+        return qn, node.args[0]
+    if isinstance(node.func, ast.Attribute) and node.func.attr in SYNC_METHODS:
+        return f".{node.func.attr}()", node.func.value
+    if isinstance(node.func, ast.Name) and node.func.id in SYNC_BUILTINS \
+            and len(node.args) == 1:
+        return f"{node.func.id}()", node.args[0]
+    return None
+
+
+def _device_taint(fn: ast.FunctionDef, ctx: ModuleContext) -> Set[str]:
+    """Names in ``fn`` holding device values: results of calls to
+    jit-wrapped names, propagated through assignments. Assigning a sync
+    result *clears* the taint (the copy lives on host)."""
+    jitted = ctx.jitted_names
+    tainted: Set[str] = set()
+
+    def value_tainted(expr) -> bool:
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Call):
+                f = sub.func
+                if isinstance(f, ast.Name) and f.id in jitted:
+                    return True
+                if isinstance(f, ast.Attribute) and f.attr in jitted:
+                    return True
+            elif isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load) \
+                    and sub.id in tainted:
+                return True
+        return False
+
+    # two passes: taint introduced late in a loop body flows to syncs
+    # earlier in the same body on the next iteration
+    for _ in range(2):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            is_sync = isinstance(node.value, ast.Call) \
+                and _sync_call(node.value, ctx) is not None
+            hot = value_tainted(node.value) and not is_sync
+            for tgt in node.targets:
+                for t in (tgt.elts if isinstance(tgt, ast.Tuple)
+                          else [tgt]):
+                    if isinstance(t, ast.Name):
+                        (tainted.add if hot else tainted.discard)(t.id)
+    return tainted
+
+
+@register
+class HostSyncInHotLoop(Rule):
+    """Host sync on a device value inside a loop of a function that drives
+    jitted steps. Each one stalls the dispatch queue; the engines budget
+    exactly one per decode step."""
+
+    code = "DLK002"
+    name = "host-sync"
+    skip_tests = True
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn in ctx.functions:
+            if not ctx.calls_jitted(fn):
+                continue
+            tainted = _device_taint(fn, ctx)
+            if not tainted:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                sync = _sync_call(node, ctx)
+                if sync is None:
+                    continue
+                loop = ctx.enclosing(node, (ast.For, ast.While))
+                if loop is None or ctx.enclosing_function(loop) is not fn:
+                    continue
+                kind, expr = sync
+                root = root_name(expr)
+                roots = {root} if root else {
+                    n.id for n in ast.walk(expr)
+                    if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+                hits = roots & tainted
+                if hits:
+                    yield ctx.finding(
+                        self, node,
+                        f"host sync {kind} on device value "
+                        f"'{sorted(hits)[0]}' in the hot loop of "
+                        f"'{fn.name}' — stalls the dispatch queue every "
+                        "iteration")

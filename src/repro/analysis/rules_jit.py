@@ -1,0 +1,312 @@
+"""jit-hygiene rules: DLK001 bare-jit, DLK003 traced-value-branch,
+DLK004 jit-kwargs-hygiene."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, ModuleContext, Rule, is_counting_jit,
+                                 is_jax_jit, is_partial_jit, literal_ints,
+                                 literal_names, qualname, register, root_name)
+
+
+@register
+class BareJit(Rule):
+    """Any ``jax.jit`` reference outside ``counting_jit``.
+
+    PR 4 made compile counts a regression-gated serving metric; an
+    executable created by a bare ``jax.jit`` never reaches a ``TraceStats``,
+    so its (re)compiles are invisible to the run stats, the telemetry
+    counters, and the CI gate. Wrap it in ``repro.core.tracing.counting_jit``
+    or justify it with ``# dalek: allow[bare-jit]``.
+
+    Skips test files: tests jit fresh reference computations by design and
+    have no compile budget to meter.
+    """
+
+    code = "DLK001"
+    name = "bare-jit"
+    skip_tests = True
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, (ast.Attribute, ast.Name))
+                    and is_jax_jit(node, ctx)):
+                continue
+            fn = ctx.enclosing_function(node)
+            if fn is not None and fn.name == "counting_jit":
+                continue    # the one sanctioned wrapper
+            yield ctx.finding(
+                self, node,
+                "bare jax.jit: executable is invisible to TraceStats and "
+                "the CI compile gate — use counting_jit (repro.core.tracing)")
+
+
+def _jit_bodies(ctx: ModuleContext) -> List[Tuple[ast.FunctionDef, Set[str]]]:
+    """(function def, static param names) for every function whose body
+    runs under trace: decorated with jax.jit / partial(jax.jit, ...),
+    passed by name to jax.jit/counting_jit, or an inner def returned by a
+    ``make_*`` step factory (this repo's step-builder convention)."""
+    defs: Dict[str, ast.FunctionDef] = {}
+    for fn in ctx.functions:
+        defs.setdefault(fn.name, fn)
+    bodies: Dict[int, Tuple[ast.FunctionDef, Set[str]]] = {}
+
+    def static_names(call: Optional[ast.Call]) -> Set[str]:
+        out: Set[str] = set()
+        if call is None:
+            return out
+        nums: List[int] = []
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                out |= set(literal_names(kw.value))
+            elif kw.arg == "static_argnums":
+                nums = literal_ints(kw.value)
+        if nums:
+            # resolve indices against the jitted fn's own params
+            fn_arg = None
+            if call.args and not is_jax_jit(call.args[0], ctx):
+                fn_arg = call.args[0]
+            elif len(call.args) > 1:
+                fn_arg = call.args[1]
+            if isinstance(fn_arg, ast.Name) and fn_arg.id in defs:
+                params = [a.arg for a in defs[fn_arg.id].args.args]
+                out |= {params[i] for i in nums if 0 <= i < len(params)}
+        return out
+
+    def add(fn: ast.FunctionDef, statics: Set[str]):
+        bodies.setdefault(id(fn), (fn, statics))
+
+    for fn in ctx.functions:
+        for dec in fn.decorator_list:
+            if is_jax_jit(dec, ctx):
+                add(fn, set())
+            elif is_partial_jit(dec, ctx):
+                add(fn, static_names(dec))
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if is_jax_jit(node.func, ctx) or is_counting_jit(node.func):
+            if node.args and isinstance(node.args[0], ast.Name) \
+                    and node.args[0].id in defs:
+                add(defs[node.args[0].id], static_names(node))
+    for fn in ctx.functions:
+        if not fn.name.startswith("make_"):
+            continue
+        inner = {n.name: n for n in fn.body
+                 if isinstance(n, ast.FunctionDef)}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Return) and isinstance(node.value,
+                                                           ast.Name):
+                if node.value.id in inner:
+                    add(inner[node.value.id], set())
+    return list(bodies.values())
+
+
+def _concretizing_names(test: ast.AST) -> Set[str]:
+    """Names whose *value* the test would force to a concrete bool —
+    excluding trace-safe uses: ``is``/``is not`` comparisons, len()/
+    isinstance()-style introspection, and .shape/.dtype/.ndim/.size
+    access (all static under tracing)."""
+    out: Set[str] = set()
+    SAFE_CALLS = {"len", "isinstance", "hasattr", "getattr", "type",
+                  "callable"}
+    SAFE_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+    def walk(node):
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in SAFE_CALLS:
+            return
+        if isinstance(node, ast.Attribute) and node.attr in SAFE_ATTRS:
+            return
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            out.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    walk(test)
+    return out
+
+
+@register
+class TracedValueBranch(Rule):
+    """Python ``if``/``while``/``assert`` on a traced value inside a jitted
+    body: concretizes the tracer (ConcretizationTypeError) or, with
+    static_argnums, silently retraces per value."""
+
+    code = "DLK003"
+    name = "traced-branch"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn, statics in _jit_bodies(ctx):
+            tainted = {a.arg for a in fn.args.args
+                       + fn.args.posonlyargs + fn.args.kwonlyargs
+                       if a.arg not in statics and a.arg != "self"}
+            inner_fns = {id(f) for f in ast.walk(fn)
+                         if isinstance(f, (ast.FunctionDef, ast.Lambda))
+                         and f is not fn}
+            for node in ast.walk(fn):
+                # taint flows through plain assignments
+                if isinstance(node, ast.Assign):
+                    used = {n.id for n in ast.walk(node.value)
+                            if isinstance(n, ast.Name)
+                            and isinstance(n.ctx, ast.Load)}
+                    if used & tainted:
+                        for tgt in node.targets:
+                            for t in (tgt.elts if isinstance(tgt, ast.Tuple)
+                                      else [tgt]):
+                                if isinstance(t, ast.Name):
+                                    tainted.add(t.id)
+                if not isinstance(node, (ast.If, ast.While, ast.Assert,
+                                         ast.IfExp)):
+                    continue
+                if any(id(a) in inner_fns for a in ctx.ancestors(node)):
+                    continue    # nested defs have their own params/trace
+                hits = _concretizing_names(node.test) & tainted
+                if hits:
+                    kind = type(node).__name__.lower()
+                    yield ctx.finding(
+                        self, node,
+                        f"python {kind} on traced value "
+                        f"({', '.join(sorted(hits))}) inside jitted body "
+                        f"'{fn.name}' — ConcretizationError/retrace hazard")
+
+
+@register
+class JitKwargsHygiene(Rule):
+    """Suspicious ``static_argnums``/``donate_argnums`` wiring: indices out
+    of range, static/donate overlap, unknown argnames, statics that look
+    like arrays (unhashable -> TypeError, or a retrace per value), and
+    donated buffers read again after the donating call."""
+
+    code = "DLK004"
+    name = "jit-kwargs"
+
+    ARRAYISH_ATTRS = {"shape", "dtype", "astype", "at", "T", "ndim"}
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        defs = {}
+        for fn in ctx.functions:
+            defs.setdefault(fn.name, fn)
+        donating: Dict[str, List[int]] = {}
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            jit_call = is_jax_jit(node.func, ctx) or is_counting_jit(node.func)
+            if not (jit_call or is_partial_jit(node, ctx)):
+                continue
+            kwargs = {kw.arg: kw.value for kw in node.keywords if kw.arg}
+            statics = literal_ints(kwargs.get("static_argnums", ast.Tuple(elts=[])))
+            donated = literal_ints(kwargs.get("donate_argnums", ast.Tuple(elts=[])))
+            snames = literal_names(kwargs.get("static_argnames", ast.Tuple(elts=[])))
+            dnames = literal_names(kwargs.get("donate_argnames", ast.Tuple(elts=[])))
+            if not (statics or donated or snames or dnames):
+                continue
+
+            overlap = sorted(set(statics) & set(donated))
+            if overlap:
+                yield ctx.finding(
+                    self, node,
+                    f"argnums {overlap} are both static and donated — a "
+                    "static arg is hashed, not a buffer; it cannot be "
+                    "donated")
+            overlap_n = sorted(set(snames) & set(dnames))
+            if overlap_n:
+                yield ctx.finding(
+                    self, node,
+                    f"argnames {overlap_n} are both static and donated")
+
+            # resolve the wrapped function for arity/param checks
+            fn_node: Optional[ast.FunctionDef] = None
+            target = None
+            if jit_call and node.args:
+                target = node.args[0]
+            if isinstance(target, ast.Name) and target.id in defs:
+                fn_node = defs[target.id]
+            elif isinstance(target, ast.Lambda):
+                fn_node = target
+            if fn_node is None:
+                continue
+            params = [a.arg for a in fn_node.args.args]
+            has_varargs = fn_node.args.vararg is not None
+            for idx in set(statics + donated):
+                if idx >= len(params) and not has_varargs:
+                    which = "static" if idx in statics else "donate"
+                    yield ctx.finding(
+                        self, node,
+                        f"{which}_argnums index {idx} out of range for "
+                        f"'{getattr(fn_node, 'name', '<lambda>')}' "
+                        f"({len(params)} positional params)")
+            known = set(params) | {a.arg for a in fn_node.args.kwonlyargs}
+            if fn_node.args.kwarg is None:
+                for nm in set(snames + dnames):
+                    if nm not in known:
+                        yield ctx.finding(
+                            self, node,
+                            f"argname '{nm}' not a parameter of "
+                            f"'{getattr(fn_node, 'name', '<lambda>')}'")
+            # array-shaped statics: a param used like an array must be traced
+            static_params = {params[i] for i in statics
+                             if 0 <= i < len(params)} | set(snames)
+            if static_params and isinstance(fn_node, ast.FunctionDef):
+                for sub in ast.walk(fn_node):
+                    if isinstance(sub, ast.Attribute) \
+                            and sub.attr in self.ARRAYISH_ATTRS \
+                            and isinstance(sub.value, ast.Name) \
+                            and sub.value.id in static_params:
+                        yield ctx.finding(
+                            self, sub,
+                            f"static param '{sub.value.id}' of "
+                            f"'{fn_node.name}' is used like an array "
+                            f"(.{sub.attr}) — static arrays are unhashable "
+                            "or retrace per value")
+
+            # remember jitted names that donate, for the call-site check
+            parent = ctx.parent(node)
+            if donated and isinstance(parent, ast.Assign):
+                for tgt in parent.targets:
+                    if isinstance(tgt, ast.Name):
+                        donating[tgt.id] = donated
+
+        # call-site check: a donated buffer read after the donating call is
+        # use-after-donate (jax warns at runtime; here it's caught statically)
+        for name, idxs in donating.items():
+            for node in ast.walk(ctx.tree):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id == name):
+                    continue
+                fn = ctx.enclosing_function(node)
+                if fn is None:
+                    continue
+                stmt = node
+                while ctx.parent(stmt) is not fn and ctx.parent(stmt) is not None:
+                    stmt = ctx.parent(stmt)
+                rebound: Set[str] = set()
+                if isinstance(stmt, ast.Assign):
+                    for tgt in stmt.targets:
+                        for t in (tgt.elts if isinstance(tgt, ast.Tuple)
+                                  else [tgt]):
+                            if isinstance(t, ast.Name):
+                                rebound.add(t.id)
+                for idx in idxs:
+                    if idx >= len(node.args):
+                        continue
+                    arg = node.args[idx]
+                    if not isinstance(arg, ast.Name) or arg.id in rebound:
+                        continue
+                    for later in ast.walk(fn):
+                        if isinstance(later, ast.Name) \
+                                and later.id == arg.id \
+                                and isinstance(later.ctx, ast.Load) \
+                                and later.lineno > node.end_lineno:
+                            yield ctx.finding(
+                                self, later,
+                                f"'{arg.id}' was donated to '{name}' "
+                                f"(line {node.lineno}) and read again — "
+                                "use-after-donate")
+                            break

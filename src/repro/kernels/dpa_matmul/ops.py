@@ -5,17 +5,21 @@ int8 activations) is the energy-oriented compute path: DPA4 doubles op/s
 over DPA2 on every DALEK CPU (paper Fig. 5) and the same 2x holds for the
 MXU's int8 path.
 """
-import functools
-
-import jax
 import jax.numpy as jnp
 
+from repro.core.tracing import TraceStats, counting_jit
 from repro.kernels.dpa_matmul.dpa_matmul import dpa_matmul
 
+#: module-level compile accounting for the jitted entry points
+stats = TraceStats()
 
-@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
-def matmul(a, b, variant="dpa2", interpret=False):
+
+def _matmul(a, b, variant="dpa2", interpret=False):
     return dpa_matmul(a, b, variant=variant, interpret=interpret)
+
+
+matmul = counting_jit(_matmul, "dpa/matmul", stats,
+                      static_argnames=("variant", "interpret"))
 
 
 def quantize_int8(x, axis):
@@ -26,10 +30,13 @@ def quantize_int8(x, axis):
     return q, scale
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def quantized_linear(x, w, interpret=False):
+def _quantized_linear(x, w, interpret=False):
     """x: [M,K] fp; w: [K,N] fp -> [M,N] f32 via int8 DPA4 kernel."""
     xq, xs = quantize_int8(x, axis=1)          # per-token
     wq, ws = quantize_int8(w, axis=0)          # per-out-channel
     acc = dpa_matmul(xq, wq, variant="dpa4", interpret=interpret)
     return acc.astype(jnp.float32) * xs * ws
+
+
+quantized_linear = counting_jit(_quantized_linear, "dpa/quantized_linear",
+                                stats, static_argnames=("interpret",))

@@ -1,15 +1,18 @@
 """Jit'd wrapper for the flash attention kernel."""
-import functools
-
-import jax
-
+from repro.core.tracing import TraceStats, counting_jit
 from repro.kernels.flash_attention.flash_attention import flash_attention
 
+#: module-level compile accounting for the jitted entry point
+stats = TraceStats()
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_kv", "interpret"))
-def attention(q, k, v, causal=True, window=None, block_q=128, block_kv=128,
-              interpret=False):
+
+def _attention(q, k, v, causal=True, window=None, block_q=128, block_kv=128,
+               interpret=False):
     return flash_attention(q, k, v, causal=causal, window=window,
                            block_q=block_q, block_kv=block_kv,
                            interpret=interpret)
+
+
+attention = counting_jit(_attention, "flash/attention", stats,
+                         static_argnames=("causal", "window", "block_q",
+                                          "block_kv", "interpret"))

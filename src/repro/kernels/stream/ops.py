@@ -1,31 +1,36 @@
 """Jit'd wrappers for the STREAM kernels; bytes-moved accounting included
 (the benchmark derives GB/s exactly like the paper's `bandwidth` tool)."""
-import functools
-
-import jax
-import jax.numpy as jnp
-
+from repro.core.tracing import TraceStats, counting_jit
 from repro.kernels.stream import stream as k
 
+#: module-level compile accounting — bench_bandwidth reports these counts
+stats = TraceStats()
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def copy(a, interpret=False):
+
+def _copy(a, interpret=False):
     return k.stream_copy(a, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def scale(a, x, interpret=False):
+def _scale(a, x, interpret=False):
     return k.stream_scale(a, x, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def add(a, b, interpret=False):
+def _add(a, b, interpret=False):
     return k.stream_add(a, b, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def triad(a, b, x, interpret=False):
+def _triad(a, b, x, interpret=False):
     return k.stream_triad(a, b, x, interpret=interpret)
+
+
+copy = counting_jit(_copy, "stream/copy", stats,
+                    static_argnames=("interpret",))
+scale = counting_jit(_scale, "stream/scale", stats,
+                     static_argnames=("interpret",))
+add = counting_jit(_add, "stream/add", stats,
+                   static_argnames=("interpret",))
+triad = counting_jit(_triad, "stream/triad", stats,
+                     static_argnames=("interpret",))
 
 
 def bytes_moved(op: str, a) -> int:

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.base import SHAPES
+from repro.core.tracing import TraceStats, counting_jit
 from repro.launch.mesh import make_production_mesh
 from repro.models import abstract_params, build_model, token_batch_specs
 from repro.perf import hlo_analysis, roofline
@@ -137,7 +138,8 @@ def build_cell(arch: str, shape_name: str, mesh, variant=None):
                          batch_specs(mesh, batch_sds, rules),
                          is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
         )
-        jitted = jax.jit(fn, in_shardings=in_shardings, donate_argnums=(0,))
+        jitted = counting_jit(fn, f"train:{arch}/{shape_name}", TraceStats(),
+                              in_shardings=in_shardings, donate_argnums=(0,))
         args = (state_sds, batch_sds)
         info = {"kind": "train", "n_micro": n_micro, "layout": layout,
                 "variant": {k: v for k, v in variant.items()}}
@@ -164,8 +166,9 @@ def build_cell(arch: str, shape_name: str, mesh, variant=None):
                            batch_specs(mesh, batch_sds, rules),
                            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
         fn = lambda p, b, c: model.prefill(p, b, c)
-        jitted = jax.jit(fn, in_shardings=(psh, bsh, csh),
-                         donate_argnums=(2,))
+        jitted = counting_jit(fn, f"prefill:{arch}/{shape_name}", TraceStats(),
+                              in_shardings=(psh, bsh, csh),
+                              donate_argnums=(2,))
         args = (params_sds, batch_sds, cache_sds)
         return jitted, args, scfg, shape, {"kind": "prefill", "rules": str(rules)}
 
@@ -178,8 +181,9 @@ def build_cell(arch: str, shape_name: str, mesh, variant=None):
     def fn(p, tok, pos, c):
         return model.decode_step(p, tok, pos, c)
 
-    jitted = jax.jit(fn, in_shardings=(psh, tsh, None, csh),
-                     donate_argnums=(3,))
+    jitted = counting_jit(fn, f"decode:{arch}/{shape_name}", TraceStats(),
+                          in_shardings=(psh, tsh, None, csh),
+                          donate_argnums=(3,))
     args = (params_sds, tok_sds, pos_sds, cache_sds)
     return jitted, args, scfg, shape, {"kind": "decode", "rules": str(rules)}
 
@@ -205,6 +209,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, force=False):
         rec.update(info)
         with mesh:
             t_l = time.time()
+            # counting_jit's AOT hook: the lower records one trace on the
+            # cell's TraceStats, so dryrun executables are metered too
             lowered = jitted.lower(*args)
             rec["lower_s"] = time.time() - t_l
             t_c = time.time()
@@ -228,6 +234,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, force=False):
         rl = roofline.compute_roofline(analysis, n_chips, mf)
         rec.update(analysis=analysis, roofline=rl.to_dict(),
                    n_params=n_total, n_params_active=n_active,
+                   jit_traces=jitted.stats.snapshot(),
                    wall_s=time.time() - t0)
         hbm_gb = (analysis["memory"]["argument_bytes"]
                   + analysis["memory"]["temp_bytes"]) / 2**30

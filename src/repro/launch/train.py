@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.base import ShapeConfig
+from repro.core.tracing import TraceStats, counting_jit
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -56,14 +57,19 @@ def main(argv=None):
                         total_steps=args.steps)
     step_cfg = StepConfig(num_microbatches=args.micro)
     train_step = make_train_step(model, opt_cfg, step_cfg)
+    # counting_jit (not bare jax.jit): a training retrace burns the same
+    # silent watts a serving retrace does — the stats land in the summary
+    trace_stats = TraceStats()
     if mesh is not None:
         from repro.train.step import batch_specs, shardings, state_specs
         from repro.models import token_batch_specs
         ssh = shardings(mesh, state_specs(mesh, params, axes))
-        train_step = jax.jit(train_step, in_shardings=(ssh, None),
-                             donate_argnums=(0,))
+        train_step = counting_jit(train_step, "train_step", trace_stats,
+                                  in_shardings=(ssh, None),
+                                  donate_argnums=(0,))
     else:
-        train_step = jax.jit(train_step, donate_argnums=(0,))
+        train_step = counting_jit(train_step, "train_step", trace_stats,
+                                  donate_argnums=(0,))
 
     data = SyntheticTokens(
         DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=args.seq,
@@ -80,6 +86,7 @@ def main(argv=None):
 
     state, history, summary = loop_mod.run(
         train_step, state, data, loop_cfg, on_step=on_step)
+    summary["train_step_compiles"] = trace_stats.compiles("train_step")
     print(f"final loss {history[-1]['loss']:.4f}  "
           f"J/token {summary['j_per_token']:.4f}  "
           f"avg {summary['avg_power_w']:.1f} W  "

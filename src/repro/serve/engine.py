@@ -270,6 +270,7 @@ class ServeEngine:
             logits, caches = self._prefill(self.params, {"tokens": tokens},
                                            caches)
         cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # dalek: allow[host-sync] one whole-batch fetch after prefill gates the first emit
         cur_host = np.asarray(cur)
         t_prefill = time.perf_counter() - t0
         # attribute only the true prompt tokens: left-pad, bucket tail, and
@@ -308,7 +309,8 @@ class ServeEngine:
             td0 = time.perf_counter()
             cur, _, caches = self._decode(self.params, cur,
                                           jnp.int32(s + step), caches)
-            cur_host = np.asarray(cur)      # one host sync per step
+            # dalek: allow[host-sync] the designed once-per-step [B,1] fetch (EOS/budget checks)
+            cur_host = np.asarray(cur)
             dt = time.perf_counter() - td0
             t_dec += dt
             step += 1
@@ -328,6 +330,7 @@ class ServeEngine:
             "decode_tok_per_s": n_decoded / t_dec if t_dec else 0.0,
             "prefill_compiles": self.trace_stats.compiles("prefill"),
             "decode_compiles": self.trace_stats.compiles("decode"),
+            "compiles": self.trace_stats.snapshot(),
         }
 
 
@@ -379,7 +382,8 @@ class ContinuousEngine:
             self._prefill_slot = counting_jit(
                 make_paged_slot_prefill(model, bucketed=bool(self.buckets)),
                 "prefill", self.trace_stats, on_compile=self._on_compile)
-            self._zero_blocks, self._copy_block = make_block_ops()
+            self._zero_blocks, self._copy_block = make_block_ops(
+                self.trace_stats, self._on_compile)
         else:
             self.pages = None
             self.prefix = None
@@ -389,7 +393,9 @@ class ContinuousEngine:
             self._prefill_slot = counting_jit(
                 make_slot_prefill(model, bucketed=bool(self.buckets)),
                 "prefill", self.trace_stats, on_compile=self._on_compile)
-        self._reset_slot = jax.jit(reset_cache_slot)
+        self._reset_slot = counting_jit(reset_cache_slot, "reset_slot",
+                                        self.trace_stats,
+                                        on_compile=self._on_compile)
         self.pm = ServePowerModel(
             _count_params(params), dev=dev,
             cache_bytes=_cache_bytes(model, batch_size, max_seq))
@@ -569,6 +575,7 @@ class ContinuousEngine:
                 next_tok, _, self.caches = self._prefill_slot(
                     self.params, jnp.asarray(prompt[None, :]),
                     jnp.int32(slot.index), self.caches)
+            # dalek: allow[host-sync] first sampled token must reach the host to emit/EOS-check
             self._first_tok = int(np.asarray(next_tok)[0, 0])
         first = self._first_tok
         dt = time.perf_counter() - t0
@@ -620,6 +627,7 @@ class ContinuousEngine:
             next_tok, _, self.caches = self._prefill_slot(
                 self.params, jnp.asarray(tail[None, :]), jnp.int32(start),
                 table_row, self.caches)
+        # dalek: allow[host-sync] first sampled token must reach the host to emit/EOS-check
         self._first_tok = int(np.asarray(next_tok)[0, 0])
         if self.prefix is not None:
             self.prefix.insert(prompt, self.pages.table_row(slot.index))
@@ -651,7 +659,8 @@ class ContinuousEngine:
         else:
             next_tok, _, self.caches = self._decode(self.params, tokens, pos,
                                                     self.caches)
-        toks = np.asarray(next_tok)          # one host sync per step
+        # dalek: allow[host-sync] the designed once-per-step [B,1] fetch (EOS/budget checks)
+        toks = np.asarray(next_tok)
         dt = time.perf_counter() - t0
         self._decode_s += dt
         self._decode_steps += 1
@@ -705,6 +714,9 @@ class ContinuousEngine:
             "dvfs_f_ghz": self.dvfs.f_ghz if self.dvfs else None,
             "prefill_compiles": self.trace_stats.compiles("prefill"),
             "decode_compiles": self.trace_stats.compiles("decode"),
+            # every executable family the engine traced — incl. the pool
+            # maintenance ops (reset_slot / zero_blocks / copy_block)
+            "compiles": self.trace_stats.snapshot(),
             "prefill_buckets": list(self.buckets) if self.buckets else None,
             "kv_block_size": self.block_size,
         }

@@ -32,101 +32,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.tracing import (TraceStats, _abstract_signature,  # noqa: F401
+                                counting_jit)
 from repro.models.common import (copy_cache_block, gather_cache_slot,
                                  mask_cache_tail, paged_gather,
                                  paged_scatter_block, paged_scatter_slot,
                                  reset_cache_blocks, scatter_cache_slot)
 from repro.parallel.sharding import spec_for
 
-
-# ---------------------------------------------------------------------------
-# compile accounting
-
-
-class TraceStats:
-    """Per-step-family jit trace/compile counters.
-
-    One counter per step name ("prefill", "decode", ...): ``counting_jit``
-    bumps it whenever a call presents an abstract input signature (pytree
-    structure + leaf shapes/dtypes + static values) the wrapper has not seen
-    before — exactly the condition under which ``jax.jit`` traces and XLA
-    compiles a new executable. Bounded compile counts are a serving
-    invariant: with length bucketing, ``compiles("prefill")`` can never
-    exceed the bucket count no matter the traffic shape, and the CI
-    regression gate fails any PR that reintroduces a retrace.
-    """
-
-    def __init__(self):
-        self.compile_counts: Dict[str, int] = {}
-        self.call_counts: Dict[str, int] = {}
-
-    def record(self, name: str, new_trace: bool):
-        self.call_counts[name] = self.call_counts.get(name, 0) + 1
-        if new_trace:
-            self.compile_counts[name] = self.compile_counts.get(name, 0) + 1
-
-    def compiles(self, name: Optional[str] = None) -> int:
-        if name is not None:
-            return self.compile_counts.get(name, 0)
-        return sum(self.compile_counts.values())
-
-    def calls(self, name: str) -> int:
-        return self.call_counts.get(name, 0)
-
-    def snapshot(self) -> Dict[str, int]:
-        return dict(self.compile_counts)
-
-
-def _abstract_signature(args, kwargs):
-    """Hashable abstract signature of a call: treedef + per-leaf
-    (shape, dtype) for arrays, value identity for python statics."""
-    leaves, treedef = jax.tree.flatten((args, kwargs))
-
-    def describe(leaf):
-        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
-            return (tuple(leaf.shape), str(leaf.dtype),
-                    bool(getattr(leaf, "weak_type", False)))
-        return ("py", type(leaf).__name__, repr(leaf))
-
-    return (treedef,) + tuple(describe(l) for l in leaves)
-
-
-def counting_jit(fn, name: str, stats: Optional[TraceStats] = None,
-                 on_compile=None, **jit_kwargs):
-    """``jax.jit(fn)`` wrapped with trace accounting.
-
-    A call that grows the jit executable cache counts as one compile on
-    ``stats`` (and fires ``on_compile(name)`` — the hook engines use to
-    surface compile activity through telemetry counters). The primary
-    detector is the cache-size delta around the call (exact and O(1)); when
-    that private accessor is unavailable the wrapper falls back to tracking
-    abstract input signatures, which costs a pytree flatten per call. The
-    wrapped jitted function is exposed as ``wrapper.jitted``.
-    """
-    jitted = jax.jit(fn, **jit_kwargs)
-    cache_size = getattr(jitted, "_cache_size", None)
-    seen = set()
-
-    def wrapper(*args, **kwargs):
-        if cache_size is not None:
-            before = cache_size()
-            out = jitted(*args, **kwargs)
-            new = cache_size() > before
-        else:
-            sig = _abstract_signature(args, kwargs)
-            new = sig not in seen
-            if new:
-                seen.add(sig)
-            out = jitted(*args, **kwargs)
-        if stats is not None:
-            stats.record(name, new)
-        if new and on_compile is not None:
-            on_compile(name)
-        return out
-
-    wrapper.jitted = jitted
-    wrapper.step_name = name
-    return wrapper
+# compile accounting (``TraceStats``/``counting_jit``) lives in
+# ``repro.core.tracing`` — training and launch meter compiles too — and is
+# re-exported here for the serving call sites and existing imports.
 
 
 # ---------------------------------------------------------------------------
@@ -293,13 +209,18 @@ def make_paged_slot_prefill(model, bucketed: bool = False):
     return paged_bucketed_slot_prefill
 
 
-def make_block_ops():
+def make_block_ops(stats: Optional[TraceStats] = None, on_compile=None):
     """Jitted pool maintenance ops: (zero_blocks, copy_block).
 
     ``zero_blocks(pool, blocks)`` scrubs freed blocks (fixed-width padded
     id vector -> one executable); ``copy_block(pool, src, dst)`` is the
-    copy-on-write arm (traced scalars -> one executable)."""
-    return jax.jit(reset_cache_blocks), jax.jit(copy_cache_block)
+    copy-on-write arm (traced scalars -> one executable). Both run under
+    ``counting_jit`` so the engine's ``TraceStats`` — and the CI compile
+    gate — see the pool-maintenance executables, not just prefill/decode."""
+    return (counting_jit(reset_cache_blocks, "zero_blocks", stats,
+                         on_compile=on_compile),
+            counting_jit(copy_cache_block, "copy_block", stats,
+                         on_compile=on_compile))
 
 
 def serve_rules(shape):

@@ -1,0 +1,410 @@
+"""dalek-lint self-tests: per-rule fixtures (positive / suppressed / clean),
+baseline round-trip, CLI exit codes, and the repo-is-clean invariant."""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source, rule_codes
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.cli import gate_rows
+from repro.analysis.cli import main as cli_main
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def lint(code, path="mod.py", **kw):
+    return analyze_source(textwrap.dedent(code), path, **kw)
+
+
+def active(findings, code=None):
+    return [f for f in findings if f.active
+            and (code is None or f.code == code)]
+
+
+def codes(findings):
+    return sorted({f.code for f in findings if f.active})
+
+
+# -- DLK001 bare-jit ---------------------------------------------------------
+
+
+def test_bare_jit_call_and_decorator_flagged():
+    fs = lint("""
+        import jax, functools
+        step = jax.jit(lambda x: x)
+
+        @jax.jit
+        def f(x):
+            return x
+
+        @functools.partial(jax.jit, static_argnums=(1,))
+        def g(x, n):
+            return x
+    """)
+    assert len(active(fs, "DLK001")) == 3
+
+
+def test_bare_jit_from_import_alias():
+    fs = lint("""
+        from jax import jit
+        f = jit(lambda x: x)
+    """)
+    assert codes(fs) == ["DLK001"]
+
+
+def test_counting_jit_clean():
+    fs = lint("""
+        from repro.core.tracing import counting_jit
+        def step(x):
+            return x
+        f = counting_jit(step, "step")
+    """)
+    assert active(fs) == []
+
+
+def test_bare_jit_suppressed_and_skips_tests():
+    src = """
+        import jax
+        f = jax.jit(lambda x: x)  # dalek: allow[bare-jit] fixture
+    """
+    fs = lint(src)
+    assert active(fs) == [] and any(f.suppressed for f in fs)
+    assert active(lint("""
+        import jax
+        f = jax.jit(lambda x: x)
+    """, path="tests/test_x.py")) == []
+
+
+# -- DLK002 host-sync-in-hot-loop --------------------------------------------
+
+HOT_LOOP = """
+    import jax
+    import numpy as np
+    step = jax.jit(lambda x: x)  # dalek: allow[bare-jit] fixture
+
+    def drive(x):
+        for _ in range(8):
+            x = step(x)
+            {sync}
+        return x
+"""
+
+
+@pytest.mark.parametrize("sync", [
+    "h = np.asarray(x)", "h = x.item()", "h = int(x)",
+    "h = float(np.asarray(x)[0])", "x.block_until_ready()",
+])
+def test_host_sync_in_loop_flagged(sync):
+    assert codes(lint(HOT_LOOP.format(sync=sync))) == ["DLK002"]
+
+
+def test_host_sync_on_host_value_clean():
+    # np.asarray on a host-side value (the prompt) is not a device sync
+    fs = lint("""
+        import jax
+        import numpy as np
+        step = jax.jit(lambda x: x)  # dalek: allow[bare-jit] fixture
+
+        def drive(reqs):
+            for r in reqs:
+                p = np.asarray(r)
+                y = step(p)
+            return y
+    """)
+    assert active(fs, "DLK002") == []
+
+
+def test_host_sync_outside_loop_clean():
+    fs = lint("""
+        import jax
+        import numpy as np
+        step = jax.jit(lambda x: x)  # dalek: allow[bare-jit] fixture
+
+        def drive(x):
+            y = step(x)
+            return np.asarray(y)
+    """)
+    assert active(fs, "DLK002") == []
+
+
+def test_host_sync_suppressed():
+    fs = lint(HOT_LOOP.format(
+        sync="h = np.asarray(x)  # dalek: allow[host-sync] designed fetch"))
+    assert active(fs) == [] and any(
+        f.suppressed and f.code == "DLK002" for f in fs)
+
+
+# -- DLK003 traced-value-branch ----------------------------------------------
+
+
+def test_traced_branch_flagged():
+    fs = lint("""
+        import jax
+
+        @jax.jit  # dalek: allow[bare-jit] fixture
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    assert "DLK003" in codes(fs)
+
+
+def test_traced_branch_via_factory_and_name_arg():
+    fs = lint("""
+        import jax
+        from repro.core.tracing import counting_jit
+
+        def make_step(scale):
+            def step(x):
+                while x < scale:
+                    x = x * 2
+                return x
+            return step
+
+        def body(x):
+            assert x > 0
+            return x
+        g = counting_jit(body, "body")
+    """)
+    assert len(active(fs, "DLK003")) == 2
+
+
+def test_traced_branch_static_and_safe_tests_clean():
+    fs = lint("""
+        import jax, functools
+
+        @functools.partial(jax.jit, static_argnames=("n",))  # dalek: allow[bare-jit] fixture
+        def f(x, n, key=None):
+            if n > 2:                      # static: fine
+                x = x + 1
+            if key is None:                # identity test: fine
+                x = x + 2
+            if x.ndim == 2:                # shape introspection: fine
+                x = x + 3
+            return x
+    """)
+    assert active(fs) == []
+
+
+# -- DLK004 jit-kwargs-hygiene -----------------------------------------------
+
+
+def test_jit_kwargs_overlap_and_range():
+    fs = lint("""
+        import jax
+        def f(a, b):
+            return a + b
+        g = jax.jit(f, static_argnums=(1,), donate_argnums=(1,))  # dalek: allow[bare-jit] fixture
+        h = jax.jit(f, donate_argnums=(5,))  # dalek: allow[bare-jit] fixture
+    """)
+    msgs = [f.message for f in active(fs, "DLK004")]
+    assert any("both static and donated" in m for m in msgs)
+    assert any("out of range" in m for m in msgs)
+
+
+def test_jit_kwargs_unknown_argname_and_array_static():
+    fs = lint("""
+        import jax
+        def f(x, n):
+            return x * n
+        g = jax.jit(f, static_argnames=("m",))  # dalek: allow[bare-jit] fixture
+
+        def h(x, w):
+            return x @ w.T
+        k = jax.jit(h, static_argnames=("w",))  # dalek: allow[bare-jit] fixture
+    """)
+    msgs = [f.message for f in active(fs, "DLK004")]
+    assert any("not a parameter" in m for m in msgs)
+    assert any("used like an array" in m for m in msgs)
+
+
+def test_jit_kwargs_use_after_donate():
+    fs = lint("""
+        import jax
+        def f(state, batch):
+            return state
+        step = jax.jit(f, donate_argnums=(0,))  # dalek: allow[bare-jit] fixture
+
+        def drive(state, batch):
+            out = step(state, batch)
+            return state.params        # donated buffer read again
+    """)
+    assert any("use-after-donate" in f.message for f in active(fs, "DLK004"))
+
+
+def test_jit_kwargs_clean():
+    fs = lint("""
+        import jax
+        def f(state, batch, n):
+            return state
+        step = jax.jit(f, static_argnums=(2,), donate_argnums=(0,))  # dalek: allow[bare-jit] fixture
+
+        def drive(state, batch):
+            state = step(state, batch, 4)
+            return state
+    """)
+    assert active(fs, "DLK004") == []
+
+
+# -- DLK005 untagged-energy-region -------------------------------------------
+
+
+def test_untagged_sample_flagged():
+    fs = lint("""
+        from repro.telemetry.session import MonitorSession
+        session = MonitorSession(None)
+        session.sample(0.1)
+    """)
+    assert codes(fs) == ["DLK005"]
+
+
+def test_sample_with_tags_or_region_clean():
+    fs = lint("""
+        from repro.telemetry.session import MonitorSession
+        session = MonitorSession(None)
+        session.sample(0.1, tags=("prefill",))
+        with session.region("train_step"):
+            session.sample(0.2)
+    """)
+    assert active(fs) == []
+
+
+def test_untagged_sample_factory_unpack_and_suppression():
+    fs = lint("""
+        from repro.train.loop import make_session
+        session, power = make_session()
+        session.sample(0.1)  # dalek: allow[untagged-energy] fixture
+        session.sample(0.2)
+    """)
+    act = active(fs, "DLK005")
+    assert len(act) == 1 and act[0].line == 5
+    assert any(f.suppressed for f in fs)
+
+
+# -- DLK006 refcount-pairing --------------------------------------------------
+
+
+def test_refcount_discarded_and_unused_alloc_flagged():
+    fs = lint("""
+        def a(pool):
+            pool.alloc()               # result dropped
+
+        def b(pool):
+            blk = pool.alloc()         # never used again
+            return None
+    """)
+    msgs = [f.message for f in active(fs, "DLK006")]
+    assert any("discarded" in m for m in msgs)
+    assert any("never used" in m for m in msgs)
+
+
+def test_refcount_early_exit_flagged_guard_exempt():
+    fs = lint("""
+        def leaky(self, pool, full):
+            blk = pool.alloc()
+            if full:
+                return None            # leaks blk
+            self.table.append(blk)
+
+        def guarded(self, pool):
+            blk = pool.alloc()
+            if blk is None:
+                return None            # alloc failed: nothing to release
+            self.table.append(blk)
+    """)
+    act = active(fs, "DLK006")
+    assert len(act) == 1 and "leaks on this path" in act[0].message
+
+
+def test_refcount_clean_patterns():
+    fs = lint("""
+        def map_shared(self, slot, blocks):
+            for j, blk in enumerate(blocks):
+                self.pool.retain(blk)
+                self.tables[slot, j] = blk
+
+        def grow(self, slot):
+            blk = self.pages.alloc()
+            if blk is None:
+                return False
+            self.tables[slot].append(blk)
+            return True
+    """)
+    assert active(fs, "DLK006") == []
+
+
+# -- suppression / baseline / CLI ---------------------------------------------
+
+
+def test_pragma_allow_all_and_code_token():
+    fs = lint("""
+        import jax
+        f = jax.jit(lambda x: x)  # dalek: allow[all]
+        g = jax.jit(lambda x: x)  # dalek: allow[DLK001]
+    """)
+    assert active(fs) == [] and sum(f.suppressed for f in fs) == 2
+
+
+def test_baseline_round_trip_and_determinism(tmp_path):
+    src = "import jax\nf = jax.jit(lambda x: x)\n"
+    fs = lint(src)
+    bl = tmp_path / "baseline.json"
+    baseline_mod.save(fs, bl)
+    first = bl.read_bytes()
+    baseline_mod.save(fs, bl)
+    assert bl.read_bytes() == first            # byte-stable
+    doc = json.loads(first)
+    assert doc["counts"] == {"DLK001": 1}
+    assert doc["findings"] == sorted(doc["findings"],
+                                     key=lambda e: (e["code"], e["path"],
+                                                    e["line_text"]))
+    fs2 = lint(src)
+    baseline_mod.apply(fs2, baseline_mod.load(bl))
+    assert all(f.baselined for f in fs2) and active(fs2) == []
+
+
+def test_cli_exit_codes_and_gate_json(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\nf = jax.jit(lambda x: x)\n")
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert cli_main([str(bad)]) == 1
+    assert cli_main([str(good)]) == 0
+    # --write-baseline grandfathers the finding; --baseline then passes
+    bl = tmp_path / "bl.json"
+    assert cli_main([str(bad), "--baseline-file", str(bl),
+                     "--write-baseline"]) == 0
+    assert cli_main([str(bad), "--baseline-file", str(bl), "--baseline"]) == 0
+    gate = tmp_path / "gate.json"
+    assert cli_main([str(bad), "--gate-json", str(gate)]) == 1
+    rows = json.loads(gate.read_text())
+    assert rows["analysis/total"]["findings"] == 1
+    assert rows["analysis/DLK001"]["findings"] == 1
+    # zero rows exist for every registered rule (first firing must gate)
+    for code in rule_codes():
+        assert f"analysis/{code}" in rows
+
+
+def test_gate_rows_shape():
+    rows = gate_rows([])
+    assert all(v == {"findings": 0} for v in rows.values())
+    assert "analysis/total" in rows
+
+
+# -- the repo itself is clean --------------------------------------------------
+
+
+def test_repo_is_lint_clean_modulo_baseline():
+    paths = [str(REPO / "src"), str(REPO / "benchmarks"), str(REPO / "tests")]
+    findings = analyze_paths(paths)
+    baseline_mod.apply(findings, baseline_mod.load())
+    assert [f.render() for f in findings if f.active] == []
+
+
+def test_checked_in_baseline_has_no_bare_jit():
+    # ISSUE policy: DLK001 violations are fixed, never grandfathered
+    keys = baseline_mod.load()
+    assert not any(code == "DLK001" for code, _, _ in keys)
