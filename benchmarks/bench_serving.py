@@ -26,6 +26,18 @@ for the CI perf-trajectory artifact; the ``compiles`` fields are what the
 cross-run regression gate (``benchmarks.regression_gate``) pins, and the
 ``hit_rate`` field is gated against decreases the same way.
 
+A fourth scenario prices the observability layer itself: the per-step span
+emission cost (microbenched in the exact ``decode_step`` shape the engine
+emits) over the measured mean decode-step wall — the first-order decode
+tok/s loss from tracing. The fraction rides in a
+``{"value": ..., "budget": 0.05}`` row — the regression gate fails whenever
+span emission costs more than 5% decode throughput, *without* needing a
+previous artifact to diff against.
+
+``--trace-out PATH`` exports the shared-prefix cached run's span timeline
+as Perfetto/chrome-trace JSON with per-span attributed joules (CI uploads
+it as an artifact next to the bench rows).
+
     PYTHONPATH=src python -m benchmarks.bench_serving [--json PATH]
 """
 import argparse
@@ -36,6 +48,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import build_model
+from repro.obs import write_chrome_trace
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 
 from benchmarks.common import BenchRows
@@ -73,7 +86,7 @@ def run_continuous(model, params, cfg, args):
     eng.reset_metrics()
     reqs = make_requests(cfg, args.requests, args.prompt_len)
     st = eng.serve(reqs)
-    return reqs, st
+    return reqs, st, eng
 
 
 def make_mixed_requests(cfg, lengths, max_new, seed=0):
@@ -118,6 +131,36 @@ def make_shared_prefix_requests(cfg, n, prefix_len, tail_len, max_new,
     return out
 
 
+def run_span_overhead(model, params, cfg, args, eng, st):
+    """Fractional decode-throughput cost of span emission.
+
+    Comparing whole-run tok/s with tracing on vs off drowns the signal in
+    run-to-run jit variance on shared CI runners (the span work is a few µs
+    against ~ms steps), so this measures the two factors directly instead:
+    the per-step span cost (microbenched on the live engine's tracer —
+    exactly the ``decode_step`` shape the engine emits: span + step gauges
+    as attrs + window ref + end) over the measured mean decode-step wall
+    from the continuous-batching scenario just run. Best of N microbench
+    repeats sheds scheduler noise; the ratio is the first-order tok/s loss.
+    """
+    step_wall = st["decode_s"] / max(st["decode_steps"], 1)
+    tr = eng.tracer
+    n = 2000
+    span_cost = float("inf")
+    for _ in range(args.overhead_repeats):
+        tr.clear()
+        t0 = time.perf_counter()
+        for i in range(n):
+            with tr.span("decode_step", track="engine", active=4,
+                         queue_depth=8, free_blocks=12,
+                         evictable_blocks=3) as sp:
+                sp.set("window", i)
+        span_cost = min(span_cost, (time.perf_counter() - t0) / n)
+    tr.clear()
+    overhead = span_cost / step_wall if step_wall else 0.0
+    return span_cost, step_wall, overhead
+
+
 def run_shared_prefix(model, params, cfg, args, prefix_cache):
     eng = ContinuousEngine(model, params, batch_size=args.batch,
                            max_seq=args.prefix_max_seq,
@@ -135,7 +178,7 @@ def run_shared_prefix(model, params, cfg, args, prefix_cache):
     t0 = time.perf_counter()
     st = eng.serve(reqs)
     st["wall_s"] = time.perf_counter() - t0
-    return reqs, st
+    return reqs, st, eng
 
 
 def main(argv=None):
@@ -158,8 +201,17 @@ def main(argv=None):
                     help="distinct per-request tail length")
     ap.add_argument("--prefix-max-new", type=int, default=2)
     ap.add_argument("--prefix-max-seq", type=int, default=128)
+    ap.add_argument("--overhead-repeats", type=int, default=3,
+                    help="span-emission microbench repeats (best-of-N "
+                         "sheds CI scheduler noise)")
+    ap.add_argument("--span-budget", type=float, default=0.05,
+                    help="max fraction of decode tok/s span emission may "
+                         "cost (budget row, gated absolutely)")
     ap.add_argument("--json", default=None,
                     help="dump rows as JSON (CI perf-trajectory artifact)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the shared-prefix cached run's Perfetto "
+                         "timeline (spans + per-span attributed joules)")
     args = ap.parse_args(argv)
     rows = BenchRows()
 
@@ -168,7 +220,7 @@ def main(argv=None):
     params, _ = model.init(jax.random.key(0))
 
     s_reqs, s_tokens, s_dec = run_static(model, params, cfg, args)
-    c_reqs, c_st = run_continuous(model, params, cfg, args)
+    c_reqs, c_st, c_eng = run_continuous(model, params, cfg, args)
 
     s_tps = s_tokens / s_dec if s_dec else 0.0
     c_tps = c_st["decode_tok_per_s"]
@@ -215,10 +267,10 @@ def main(argv=None):
                 compiles=b_st["prefill_compiles"])
 
     # -- shared-prefix scenario: radix prefix cache off vs on --------------
-    p_reqs, p_st = run_shared_prefix(model, params, cfg, args,
-                                     prefix_cache=False)
-    h_reqs, h_st = run_shared_prefix(model, params, cfg, args,
-                                     prefix_cache=True)
+    p_reqs, p_st, _ = run_shared_prefix(model, params, cfg, args,
+                                        prefix_cache=False)
+    h_reqs, h_st, h_eng = run_shared_prefix(model, params, cfg, args,
+                                            prefix_cache=True)
     assert all(a.output == b.output for a, b in zip(p_reqs, h_reqs)), \
         "prefix-cache hits changed generated tokens"
 
@@ -253,6 +305,22 @@ def main(argv=None):
     rows.record("serve/aux_compiles", 0.0,
                 ";".join(f"{k}={v}" for k, v in sorted(aux.items())) or "none",
                 compiles=sum(aux.values()))
+
+    # -- span-overhead scenario: observability must be near-free -----------
+    span_cost, step_wall, overhead = run_span_overhead(
+        model, params, cfg, args, c_eng, c_st)
+    rows.record("serve/span_overhead", span_cost,
+                f"span={span_cost*1e6:.2f}us;step={step_wall*1e6:.0f}us;"
+                f"overhead={overhead:.2%}",
+                value=overhead, budget=args.span_budget)
+
+    if args.trace_out:
+        write_chrome_trace(
+            args.trace_out, h_eng.tracer,
+            session=h_eng.tel.session if h_eng.tel is not None else None,
+            meta={"process": "bench-serving", "arch": cfg.name,
+                  "scenario": "shared-prefix-cached"})
+        print(f"timeline -> {args.trace_out}")
     rows.dump(args.json)
     print(f"\nstatic    : {s_tokens:.0f} tokens in {s_dec*1e3:.0f} ms decode "
           f"({s_tps:.1f} tok/s)")
@@ -283,6 +351,13 @@ def main(argv=None):
           f"{h_tps:.1f} tok/s e2e, {h_jtok:.3f} J/token")
     print(f"  prefix-cache speedup: {prefix_speedup:.2f}x "
           f"({'PASS' if prefix_speedup >= 2.0 else 'FAIL'} >= 2x gate)")
+    print(f"\nspan-overhead scenario (best of {args.overhead_repeats} "
+          f"microbench repeats):")
+    print(f"  decode_step span emission: {span_cost*1e6:.2f} us/step")
+    print(f"  measured decode step wall: {step_wall*1e6:.0f} us")
+    print(f"  overhead: {overhead:.2%} "
+          f"({'PASS' if overhead <= args.span_budget else 'FAIL'} <= "
+          f"{args.span_budget:.0%} budget)")
     print("\nper-request energy (tag-bus attribution):")
     for r in c_reqs:
         print(f"  req {r.req_id:2d}: {len(r.output):2d} tokens  "

@@ -16,7 +16,22 @@ uploaded artifact and fails (exit 1) on:
 - ANY increase in a row's ``findings`` field — the ``repro.analysis``
   linter (``--gate-json``) emits one row per rule with its non-suppressed
   finding count; an increase means a new DLK violation landed without a
-  pragma or a fix.
+  pragma or a fix, or
+- ANY drift in a replay-report row (``launch.replay --json``: rows carrying
+  ``attributed_j``) — replay is a pure function of (trace bytes, workload,
+  policy) and the CI trace is recorded from seeded sources, so energies are
+  bit-stable across runs and counts (completed/shed/tokens) are exact; any
+  change means an admission-policy or attribution regression, or
+- a ``budget`` row exceeding its ceiling: a row shaped
+  ``{"value": v, "budget": b}`` fails whenever ``v > b``, *including on the
+  first run with no previous artifact* — absolute acceptance bars (e.g. the
+  serving bench's span-emission overhead, <5% decode tokens/s) gate
+  themselves rather than only gating drift.
+
+``--history FILE`` appends one record per gated artifact (rows + failure
+strings, plus ``--run-id`` when given) to a JSON list that CI carries
+forward as an artifact — the cross-run trajectory is inspectable instead
+of only the last pairwise diff.
 
 Rows carrying a ``compiles`` field are *only* gated on the compile count:
 their wall time is cold-compile-dominated by design, which swings well past
@@ -82,11 +97,69 @@ def diff_rows(name, prev, cur, threshold):
                 f"{name}:{row}: static-analysis findings regressed "
                 f"{p_find} -> {c_find} (any increase fails: a new "
                 f"dalek-lint violation landed without a fix or pragma)")
+        # replay-report rows (launch.replay --json) are bit-deterministic:
+        # energies must match to float tolerance, counts exactly
+        if "attributed_j" in p and "attributed_j" in c:
+            for fld in ("energy_j", "attributed_j", "per_request_j"):
+                pv, cv = p.get(fld), c.get(fld)
+                if pv is not None and cv is not None and abs(cv - pv) > 1e-6:
+                    failures.append(
+                        f"{name}:{row}: replay {fld} drifted "
+                        f"{pv:.6f} -> {cv:.6f} J (replay is deterministic; "
+                        f"any drift is an attribution/policy regression)")
+            for fld in ("completed", "shed", "tokens"):
+                pv, cv = p.get(fld), c.get(fld)
+                if pv is not None and cv is not None and cv != pv:
+                    failures.append(
+                        f"{name}:{row}: replay {fld} changed {pv} -> {cv} "
+                        f"(admission decisions on a recorded trace must be "
+                        f"reproducible)")
     for row in sorted(set(cur) - set(prev)):
         print(f"  [new row, not gated] {name}:{row}")
     for row in sorted(set(prev) - set(cur)):
         print(f"  [row disappeared, not gated] {name}:{row}")
     return failures
+
+
+def check_budgets(name, rows):
+    """Absolute ceilings: rows shaped {"value": v, "budget": b} fail on
+    v > b. Applied to every *current* artifact — paired or not — so a new
+    budget row gates itself from its first run."""
+    failures = []
+    for row in sorted(rows):
+        r = rows[row]
+        if not isinstance(r, dict) or "budget" not in r or "value" not in r:
+            continue
+        v, b = r["value"], r["budget"]
+        if v > b:
+            failures.append(
+                f"{name}:{row}: value {v:.4f} exceeds budget {b:.4f} "
+                f"(absolute ceiling, gated even without a previous artifact)")
+        else:
+            print(f"  [budget ok] {name}:{row}: {v:.4f} <= {b:.4f}")
+    return failures
+
+
+def append_history(path, run_id, artifacts, failures):
+    """Append one record per gate invocation to a JSON-list history file."""
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+            if not isinstance(history, list):
+                history = []
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({
+        "run_id": run_id,
+        "passed": not failures,
+        "failures": failures,
+        "artifacts": artifacts,
+    })
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1, sort_keys=True)
+    print(f"gate history -> {path} ({len(history)} record(s))")
 
 
 def main(argv=None):
@@ -98,9 +171,17 @@ def main(argv=None):
     ap.add_argument("--pattern", default="BENCH_*.json")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="max relative us_per_call slowdown (0.15 = 15%%)")
+    ap.add_argument("--history", default=None,
+                    help="JSON file to append this run's gate record to "
+                         "(rows + failures); CI carries it forward as an "
+                         "artifact so the trajectory is inspectable")
+    ap.add_argument("--run-id", default="",
+                    help="opaque id stamped into --history records "
+                         "(e.g. $GITHUB_RUN_ID)")
     args = ap.parse_args(argv)
 
-    pairs = []
+    pairs = []       # artifacts with a previous counterpart
+    unpaired = []    # current-only artifacts (still budget-checked)
     if args.prev_dir and args.cur_dir:
         cur_files = sorted(glob.glob(os.path.join(args.cur_dir, args.pattern)))
         if not cur_files:
@@ -112,24 +193,36 @@ def main(argv=None):
             if os.path.exists(prev):
                 pairs.append((base, prev, cur))
             else:
-                print(f"  [no previous artifact, not gated] {base}")
+                print(f"  [no previous artifact, drift not gated] {base}")
+                unpaired.append((base, cur))
     elif len(args.files) == 2:
         pairs.append((os.path.basename(args.files[1]), *args.files))
     else:
         ap.error("pass PREV.json CURRENT.json or --prev-dir/--cur-dir")
 
     failures = []
+    artifacts = {}
     for name, prev, cur in pairs:
         print(f"gate: {prev} vs {cur}")
-        failures += diff_rows(name, load_rows(prev), load_rows(cur),
-                              args.threshold)
+        cur_rows = load_rows(cur)
+        artifacts[name] = cur_rows
+        failures += diff_rows(name, load_rows(prev), cur_rows, args.threshold)
+        failures += check_budgets(name, cur_rows)
+    for name, cur in unpaired:
+        cur_rows = load_rows(cur)
+        artifacts[name] = cur_rows
+        failures += check_budgets(name, cur_rows)
+
+    if args.history:
+        append_history(args.history, args.run_id, artifacts, failures)
 
     if failures:
         print(f"\nREGRESSION GATE FAILED ({len(failures)}):")
         for f in failures:
             print(f"  {f}")
         return 1
-    print(f"\nregression gate passed ({len(pairs)} artifact(s), "
+    print(f"\nregression gate passed ({len(pairs)} paired + "
+          f"{len(unpaired)} budget-only artifact(s), "
           f"threshold {args.threshold * 100:.0f}%, compile counts pinned)")
     return 0
 

@@ -10,6 +10,7 @@ DLK003   traced-branch      python control flow on a traced value in jit
 DLK004   jit-kwargs         static/donate argnums wiring errors
 DLK005   untagged-energy    MonitorSession.sample with no region()/tags
 DLK006   refcount-pairing   PagePool block acquired but not consumed/released
+DLK007   unclosed-span      obs.Tracer span opened but never ended
 =======  =================  ==================================================
 """
 from repro.analysis.core import (Finding, ModuleContext,  # noqa: F401
@@ -17,5 +18,5 @@ from repro.analysis.core import (Finding, ModuleContext,  # noqa: F401
                                  analyze_source, rule_codes, select_rules)
 # importing the rule modules populates the registry
 from repro.analysis import (rules_energy, rules_host,  # noqa: F401
-                            rules_jit, rules_refcount)
+                            rules_jit, rules_obs, rules_refcount)
 from repro.analysis.baseline import DEFAULT_BASELINE  # noqa: F401

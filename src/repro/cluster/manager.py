@@ -19,6 +19,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.elastic import ElasticController, PowerState
 from repro.cluster.topology import Topology
+from repro.obs import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -52,7 +53,8 @@ class Job:
 class ClusterManager:
     """Event-stepped scheduler + power manager over a Topology."""
 
-    def __init__(self, topo: Topology, idle_off_s: float = 600.0):
+    def __init__(self, topo: Topology, idle_off_s: float = 600.0,
+                 metrics: Optional[MetricsRegistry] = None):
         self.topo = topo
         self.elastic = ElasticController(
             {n: node.spec for n, node in topo.nodes.items()},
@@ -62,6 +64,9 @@ class ClusterManager:
         self._ids = itertools.count(1)
         self._creds: Dict[str, str] = {}
         self.scratch: Dict[str, Dict[str, list]] = {}   # node -> user -> files
+        # shared observability registry (jobs by state transition, per-user
+        # quota energy, live cluster watts) — same store the engines use
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     # -- auth (MUNGE analogue) ------------------------------------------------
 
@@ -87,10 +92,14 @@ class ClusterManager:
                duration_s: float, power_model=None) -> Job:
         job = Job(next(self._ids), user, partition, n_nodes, duration_s,
                   power_model, submit_t=self.elastic.t)
+        self.metrics.counter("cluster_jobs_submitted").inc(user=user)
         if not self.quota(user).ok():
             job.state = "FAILED"
             job.end_t = self.elastic.t
             self.jobs[job.job_id] = job
+            self.metrics.counter("cluster_jobs_failed",
+                                 "jobs rejected or failed").inc(
+                reason="quota")
             return job
         free = [n for n in self.topo.partition_nodes(partition)
                 if not self._node_busy(n)]
@@ -150,7 +159,16 @@ class ClusterManager:
                     q = self.quota(j.user)
                     q.used_time_s += j.end_t - j.start_t
                     q.used_energy_j += j.energy_j
+                    self.metrics.counter("cluster_jobs_completed").inc(
+                        user=j.user)
+                    self.metrics.counter(
+                        "cluster_job_energy_j",
+                        "measured joules debited to user quotas").inc(
+                        j.energy_j, user=j.user)
             self._start_pending()
+        self.metrics.gauge("cluster_power_w",
+                           "live whole-cluster draw").set(
+            self.elastic.total_power_w())
 
     def _start_pending(self):
         for j in self.jobs.values():
@@ -158,6 +176,9 @@ class ClusterManager:
                 continue
             if not self.quota(j.user).ok():
                 j.state = "FAILED"
+                self.metrics.counter("cluster_jobs_failed",
+                                     "jobs rejected or failed").inc(
+                    reason="quota")
                 continue
             free = [n for n in self.topo.partition_nodes(j.partition)
                     if not self._node_busy(n)]

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import build_model
+from repro.obs import write_chrome_trace
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 
 
@@ -48,6 +49,13 @@ def main(argv=None):
     ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
                     help="radix prefix cache over prompt blocks (requires "
                          "paged KV): shared prompt prefixes prefill once")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto/chrome-trace timeline JSON: "
+                         "request-lifecycle + engine-step spans with "
+                         "per-span attributed joules")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the engine metrics-registry snapshot "
+                         "(deterministic JSON)")
     args = ap.parse_args(argv)
     buckets = (args.prefill_buckets
                if args.prefill_buckets in ("auto", "off")
@@ -107,6 +115,16 @@ def main(argv=None):
         # full-session telemetry report from the unified API
         rep = engine.tel.session.report(tokens=stats.get("tokens_decoded"))
         print(f"energy: {rep}")
+    if args.trace_out and engine.tracer is not None:
+        write_chrome_trace(
+            args.trace_out, engine.tracer,
+            session=engine.tel.session if engine.tel is not None else None,
+            meta={"process": "dalek-serve", "arch": cfg.name,
+                  "engine": args.engine})
+        print(f"timeline -> {args.trace_out}")
+    if args.metrics_json:
+        engine.metrics.write_json(args.metrics_json)
+        print(f"metrics -> {args.metrics_json}")
     for r in reqs:
         j_tok = r.energy_j / max(len(r.output), 1)
         print(f"  req {r.req_id}: {len(r.output)} tokens "

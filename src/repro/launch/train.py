@@ -22,6 +22,7 @@ from repro.core.tracing import TraceStats, counting_jit
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
+from repro.obs import MetricsRegistry, Tracer, write_chrome_trace
 from repro.train import loop as loop_mod
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.step import StepConfig, TrainState, make_train_step
@@ -42,6 +43,13 @@ def main(argv=None):
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--log-json", default=None)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto/chrome-trace timeline JSON of "
+                         "the run (train_step/checkpoint spans with "
+                         "per-span attributed joules)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the metrics-registry snapshot "
+                         "(deterministic JSON)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -84,13 +92,25 @@ def main(argv=None):
                   f"gnorm {rec['grad_norm']:.3f} {rec['wall_s']*1e3:.0f}ms "
                   f"E={rec['energy_j']:.1f}J")
 
+    tracer = Tracer() if args.trace_out else None
+    registry = MetricsRegistry()
     state, history, summary = loop_mod.run(
-        train_step, state, data, loop_cfg, on_step=on_step)
+        train_step, state, data, loop_cfg, on_step=on_step, tracer=tracer,
+        metrics_registry=registry)
+    session = summary.pop("session", None)   # live object, not JSON
     summary["train_step_compiles"] = trace_stats.compiles("train_step")
     print(f"final loss {history[-1]['loss']:.4f}  "
           f"J/token {summary['j_per_token']:.4f}  "
           f"avg {summary['avg_power_w']:.1f} W  "
           f"tags {list(summary['energy_by_tag'])}")
+    if args.trace_out and tracer is not None:
+        write_chrome_trace(args.trace_out, tracer, session=session,
+                           meta={"process": "dalek-train",
+                                 "arch": cfg.name, "steps": args.steps})
+        print(f"timeline -> {args.trace_out}")
+    if args.metrics_json:
+        registry.write_json(args.metrics_json)
+        print(f"metrics -> {args.metrics_json}")
     if args.log_json:
         with open(args.log_json, "w") as f:
             json.dump({"history": history, "summary": summary}, f, default=float)

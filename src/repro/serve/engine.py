@@ -41,6 +41,7 @@ from repro.core.hw import DeviceSpec, TPU_V5E
 from repro.core.scheduler import ThroughputStats
 from repro.core.tags import N_GPIO
 from repro.models.common import reset_cache_slot
+from repro.obs import NULL_SPAN, MetricsRegistry, TelemetryEvent, Tracer
 from repro.serve.paging import (PagePool, RadixPrefixCache,
                                 resolve_kv_block_size)
 from repro.serve.queue import AdmissionController, Request, RequestQueue
@@ -136,21 +137,25 @@ class EngineTelemetry:
     N_PHASE_TAGS = 2
 
     def __init__(self, power_model: ServePowerModel, batch_size: int,
-                 node: str = "serve-node"):
+                 node: str = "serve-node",
+                 metrics: Optional[MetricsRegistry] = None):
         self.pm = power_model
         self.source = ModelSource(power_model)
         self.session = MonitorSession(self.source, node=node)
         self.n_slot_tags = max(1, min(batch_size, N_GPIO - self.N_PHASE_TAGS))
+        self.metrics = metrics
         # per-window event log: what replay needs to re-drive this session
-        # deterministically against a recorded trace (repro.tracestore)
-        self.events: List[Dict] = []
+        # deterministically against a recorded trace (repro.tracestore),
+        # and what the timeline exporter (repro.obs.export) merges with the
+        # span stream — typed schema shared by both consumers
+        self.events: List[TelemetryEvent] = []
 
     def slot_tag(self, slot_index: int) -> str:
         return f"s{slot_index % self.n_slot_tags}"
 
     def record(self, phase: str, wall_s: float, n_tokens: int,
                slot_to_req: Dict[int, Request],
-               extra: Optional[Dict] = None):
+               extra: Optional[Dict] = None) -> Optional[TelemetryEvent]:
         """Sample ``wall_s`` of board power under ``phase`` + slot tags and
         attribute each sample's energy to the requests owning the slots
         (vectorized bitmask share computation on the columnar block).
@@ -161,20 +166,22 @@ class EngineTelemetry:
         token count — a prefix-cache-served span burns no board time, so the
         engine passes only the recomputed tail and shared-prefix joules are
         attributed once, to the request that actually computed them.
-        ``extra`` (e.g. ``{"cached_tokens": ...}``) is merged into the event
-        log entry for replay/analysis."""
+        ``extra`` (e.g. ``{"cached_tokens": ...}``) rides in the typed
+        event for replay/analysis. Returns the :class:`TelemetryEvent`
+        (its ``window`` index is what step spans reference for energy
+        attribution), or None for a non-positive window."""
         if wall_s <= 0:
             return None
         self.source.set_step(n_tokens, wall_s, t0=self.session.cursor)
         tag_groups: Dict[str, List[Request]] = {}
         for idx, req in slot_to_req.items():
             tag_groups.setdefault(self.slot_tag(idx), []).append(req)
-        event = {
-            "phase": phase, "wall_s": wall_s, "n_tokens": n_tokens,
-            "groups": {tg: [r.req_id for r in reqs]
-                       for tg, reqs in tag_groups.items()}}
-        if extra:
-            event.update(extra)
+        event = TelemetryEvent(
+            phase=phase, wall_s=wall_s, n_tokens=n_tokens,
+            groups={tg: tuple(r.req_id for r in reqs)
+                    for tg, reqs in tag_groups.items()},
+            window=self.session.n_windows, t0=self.session.cursor,
+            extra=dict(extra or {}))
         self.events.append(event)
         try:
             block = self.session.sample(wall_s,
@@ -188,7 +195,11 @@ class EngineTelemetry:
             if share:
                 for r in reqs:
                     r.energy_j += share
-        return block
+        if self.metrics is not None:
+            self.metrics.counter(
+                "engine_energy_j", "board joules by phase").inc(
+                block.energy_j(), phase=phase)
+        return event
 
     def energy_stats(self) -> Dict:
         rep = self.session.report()
@@ -209,7 +220,7 @@ class ServeEngine:
 
     def __init__(self, model, params, *, batch_size: int, max_seq: int,
                  telemetry: bool = True, dev: DeviceSpec = TPU_V5E,
-                 prefill_buckets="auto"):
+                 prefill_buckets="auto", tracing: bool = True):
         self.model = model
         self.params = params
         self.batch_size = batch_size
@@ -217,10 +228,14 @@ class ServeEngine:
         self.buckets = resolve_buckets(prefill_buckets, max_seq, model)
         self.trace_stats = TraceStats()
         self.stats = ThroughputStats()
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer() if tracing else None
         self.pm = ServePowerModel(
             _count_params(params), dev=dev,
             cache_bytes=_cache_bytes(model, batch_size, max_seq))
-        self.tel = EngineTelemetry(self.pm, batch_size) if telemetry else None
+        self.tel = (EngineTelemetry(self.pm, batch_size,
+                                    metrics=self.metrics)
+                    if telemetry else None)
         self._prefill = counting_jit(
             make_prefill_step(model, bucketed=bool(self.buckets)),
             "prefill", self.trace_stats, on_compile=self._on_compile)
@@ -231,6 +246,8 @@ class ServeEngine:
     def _on_compile(self, name: str):
         if self.tel is not None:
             self.tel.session.count(f"compiles/{name}")
+        self.metrics.counter("jit_compiles",
+                             "XLA executables traced").inc(step=name)
 
     def _pad_prompts(self, reqs: List[Request]):
         """Left-pad prompts to the longest in the batch (position alignment:
@@ -262,24 +279,36 @@ class ServeEngine:
 
     def _serve_batch(self, reqs: List[Request], tokens, s: int,
                      caches) -> Dict:
-        t0 = time.perf_counter()
-        if self.buckets:
-            logits, caches = self._prefill(self.params, {"tokens": tokens},
-                                           jnp.int32(s), caches)
-        else:
-            logits, caches = self._prefill(self.params, {"tokens": tokens},
-                                           caches)
-        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        # dalek: allow[host-sync] one whole-batch fetch after prefill gates the first emit
-        cur_host = np.asarray(cur)
-        t_prefill = time.perf_counter() - t0
-        # attribute only the true prompt tokens: left-pad, bucket tail, and
-        # filler rows are compute the batch burns, not request throughput
-        n_prompt = sum(len(r.prompt) for r in reqs)
-        self.stats.observe("prefill", n_prompt, t_prefill)
-        if self.tel:
-            self.tel.record("prefill", t_prefill, n_prompt,
-                            {i: r for i, r in enumerate(reqs)})
+        pf_cm = (self.tracer.span("prefill", track="engine",
+                                  batch=len(reqs), bucket=tokens.shape[1])
+                 if self.tracer is not None
+                 else contextlib.nullcontext(NULL_SPAN))
+        with pf_cm as psp:
+            t0 = time.perf_counter()
+            if self.buckets:
+                logits, caches = self._prefill(self.params,
+                                               {"tokens": tokens},
+                                               jnp.int32(s), caches)
+            else:
+                logits, caches = self._prefill(self.params,
+                                               {"tokens": tokens}, caches)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # dalek: allow[host-sync] one whole-batch fetch after prefill gates the first emit
+            cur_host = np.asarray(cur)
+            t_prefill = time.perf_counter() - t0
+            # attribute only the true prompt tokens: left-pad, bucket tail,
+            # and filler rows are compute the batch burns, not request
+            # throughput
+            n_prompt = sum(len(r.prompt) for r in reqs)
+            self.stats.observe("prefill", n_prompt, t_prefill)
+            self.metrics.histogram("prefill_step_s",
+                                   "per-prefill wall seconds").observe(
+                t_prefill)
+            if self.tel:
+                ev = self.tel.record("prefill", t_prefill, n_prompt,
+                                     {i: r for i, r in enumerate(reqs)})
+                if ev is not None:
+                    psp.set("window", ev.window)
 
         for r in reqs:
             if r.max_new_tokens <= 0:
@@ -306,21 +335,40 @@ class ServeEngine:
             if all(r.done for r in reqs):
                 break           # nothing left: the last logits are not wasted
             active = {bi: r for bi, r in enumerate(reqs) if not r.done}
-            td0 = time.perf_counter()
-            cur, _, caches = self._decode(self.params, cur,
-                                          jnp.int32(s + step), caches)
-            # dalek: allow[host-sync] the designed once-per-step [B,1] fetch (EOS/budget checks)
-            cur_host = np.asarray(cur)
-            dt = time.perf_counter() - td0
-            t_dec += dt
-            step += 1
-            # len(active), not batch_size: filler/finished rows decode as
-            # dead weight and must not inflate throughput or touch energy
-            # attribution (they own no slot tag)
-            self.stats.observe("decode", len(active), dt)
-            if self.tel:
-                self.tel.record("decode", dt, len(active), active)
+            step_cm = (self.tracer.span("decode_step", track="engine",
+                                        active=len(active))
+                       if self.tracer is not None
+                       else contextlib.nullcontext(NULL_SPAN))
+            with step_cm as ssp:
+                td0 = time.perf_counter()
+                cur, _, caches = self._decode(self.params, cur,
+                                              jnp.int32(s + step), caches)
+                # dalek: allow[host-sync] the designed once-per-step [B,1] fetch (EOS/budget checks)
+                cur_host = np.asarray(cur)
+                dt = time.perf_counter() - td0
+                t_dec += dt
+                step += 1
+                # len(active), not batch_size: filler/finished rows decode
+                # as dead weight and must not inflate throughput or touch
+                # energy attribution (they own no slot tag)
+                self.stats.observe("decode", len(active), dt)
+                self.metrics.histogram(
+                    "decode_step_s",
+                    "fused decode step wall seconds").observe(dt)
+                if self.tel:
+                    ev = self.tel.record("decode", dt, len(active), active)
+                    if ev is not None:
+                        ssp.set("window", ev.window)
 
+        self.metrics.counter("tokens_decoded").inc(n_decoded)
+        for r in reqs:
+            self.metrics.counter("requests_finished",
+                                 "requests by finish reason").inc(
+                reason=r.finish_reason or "eos")
+            if self.tracer is not None:
+                self.tracer.instant("finish", track=f"req{r.req_id}",
+                                    req_id=r.req_id,
+                                    finish_reason=r.finish_reason)
         return {
             "prefill_s": t_prefill,
             "decode_s": t_dec,
@@ -355,7 +403,8 @@ class ContinuousEngine:
                  power_cap_w: Optional[float] = None, greedy: bool = True,
                  prefill_buckets="auto", kv_block_size="auto",
                  prefix_cache: bool = True,
-                 kv_pool_blocks: Optional[int] = None):
+                 kv_pool_blocks: Optional[int] = None,
+                 tracing: bool = True):
         self.model = model
         self.params = params
         self.batch_size = batch_size
@@ -403,20 +452,25 @@ class ContinuousEngine:
         self.admission = AdmissionController(self.pm, power_cap_w, self.stats)
         self.queue = RequestQueue()
         self.slots = SlotManager(batch_size, max_seq)
-        self.tel = EngineTelemetry(self.pm, batch_size) if telemetry else None
+        # observability: registry-backed run stats + request-lifecycle spans
+        # (queued -> admitted -> prefill -> decode -> finish) and per-step
+        # engine spans carrying window refs for the energy-attributed
+        # timeline export (repro.obs.export)
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer() if tracing else None
+        self._req_spans: Dict[int, object] = {}   # req_id -> open span
+        self.tel = (EngineTelemetry(self.pm, batch_size,
+                                    metrics=self.metrics)
+                    if telemetry else None)
         self.caches = None
         self.dvfs = self.admission.apply_dvfs(batch_size)
         self.finished: List[Request] = []
-        self._n_emitted = 0
-        self._decode_s = 0.0
-        self._prefill_s = 0.0
-        self._decode_steps = 0
-        self._prefill_computed = 0   # prompt tokens actually run (cache
-                                     # hits excluded; bucket pad excluded)
 
     def _on_compile(self, name: str):
         if self.tel is not None:
             self.tel.session.count(f"compiles/{name}")
+        self.metrics.counter("jit_compiles",
+                             "XLA executables traced").inc(step=name)
 
     # -- request intake ------------------------------------------------------
 
@@ -431,6 +485,22 @@ class ContinuousEngine:
                 f"request {req.req_id}: prompt of {len(req.prompt)} leaves "
                 f"no decode position with max_seq={self.max_seq}")
         self.queue.push(req)
+        self.metrics.counter("requests_submitted").inc()
+        if self.tracer is not None:
+            # lifecycle span 1: time on the queue. Ended (and chained into
+            # prefill/decode spans) at admission, or closed with the shed
+            # reason — _close_req_span owns the hand-off.
+            self._req_spans[req.req_id] = self.tracer.begin(
+                "queued", track=f"req{req.req_id}", req_id=req.req_id,
+                prompt_tokens=len(req.prompt),
+                max_new_tokens=req.max_new_tokens)
+
+    def _close_req_span(self, req: Request, **attrs):
+        """End the request's open lifecycle span (queued or decode)."""
+        sp = self._req_spans.pop(req.req_id, None)
+        if sp is not None:
+            sp.update(**attrs)
+            sp.end()
 
     # -- slot lifecycle ------------------------------------------------------
 
@@ -439,6 +509,13 @@ class ContinuousEngine:
         req.done = True
         req.finish_reason = reason
         self.finished.append(req)
+        self.metrics.counter("requests_finished",
+                             "requests by finish reason").inc(reason=reason)
+        self._close_req_span(req, finish_reason=reason,
+                             tokens=len(req.output), energy_j=req.energy_j)
+        if self.tracer is not None:
+            self.tracer.instant("finish", track=f"req{req.req_id}",
+                                req_id=req.req_id, finish_reason=reason)
         if self.pages is not None:
             # drop the slot's block refs; blocks whose refcount hits zero
             # queue for scrubbing and are re-zeroed before any realloc, so
@@ -504,7 +581,7 @@ class ContinuousEngine:
     def _emit(self, slot, tok: int):
         req = slot.req
         req.output.append(tok)
-        self._n_emitted += 1
+        self.metrics.counter("tokens_decoded").inc()
         if req.eos_id is not None and tok == req.eos_id:
             self._finish(slot, "eos")
         elif req.n_generated >= req.max_new_tokens:
@@ -526,6 +603,9 @@ class ContinuousEngine:
         for req in self.queue.snapshot():
             if self.admission.should_shed(req, ahead, ahead_prefill):
                 self.queue.shed(req)     # shed() drops it from the queue too
+                self.metrics.counter("requests_shed",
+                                     "sheds by reason").inc(reason="ttl")
+                self._close_req_span(req, finish_reason=req.finish_reason)
             else:
                 # a queued request costs its prompt (prefill) AND its
                 # budget (decode) — tracked separately so each phase is
@@ -543,7 +623,11 @@ class ContinuousEngine:
         while self.queue and self.slots.free_slots():
             if self.admission.max_slots(self.batch_size) == 0:
                 while self.queue:        # cap below even 1-slot power: shed
-                    self.queue.shed(self.queue.pop(), "shed-cap")
+                    req = self.queue.pop()
+                    self.queue.shed(req, "shed-cap")
+                    self.metrics.counter("requests_shed",
+                                         "sheds by reason").inc(reason="cap")
+                    self._close_req_span(req, finish_reason="shed-cap")
                 break
             if not self.admission.admit(self.slots.n_active, self.batch_size):
                 break                     # defer under the power cap
@@ -554,15 +638,28 @@ class ContinuousEngine:
                 req.done = True
                 req.finish_reason = "length"
                 self.finished.append(req)
+                self.metrics.counter(
+                    "requests_finished",
+                    "requests by finish reason").inc(reason="length")
+                self._close_req_span(req, finish_reason="length", tokens=0)
                 continue
             self._prefill_into(self.slots.free_slots()[0], req)
 
     def _prefill_into(self, slot, req: Request):
         prompt = np.asarray(req.prompt, np.int32)
+        self._close_req_span(req)        # queued span ends at admission
+        psp = NULL_SPAN
+        if self.tracer is not None:
+            self.tracer.instant("admitted", track=f"req{req.req_id}",
+                                req_id=req.req_id, slot=slot.index)
+            psp = self.tracer.begin("prefill", track=f"req{req.req_id}",
+                                    req_id=req.req_id, slot=slot.index)
         t0 = time.perf_counter()
         if self.pages is not None:
             cached, tail_len = self._prefill_paged(slot, req, prompt)
             if cached is None:
+                psp.update(finish_reason="pages")
+                psp.end()
                 return                   # pool dry: request finished "pages"
         else:
             cached, tail_len = 0, len(prompt)
@@ -581,16 +678,32 @@ class ContinuousEngine:
         dt = time.perf_counter() - t0
         req.prefill_s = dt
         req.cached_prompt_tokens = cached
-        self._prefill_s += dt
-        self._prefill_computed += tail_len
+        self.metrics.histogram("prefill_step_s",
+                               "per-prefill wall seconds").observe(dt)
+        self.metrics.counter(
+            "prefill_tokens_computed",
+            "prompt tokens actually run (cache hits and bucket pad "
+            "excluded)").inc(tail_len)
         # throughput + energy see only the *computed* tail: cached tokens
         # burn no board time, so shared-prefix joules are attributed once —
         # to the request that actually ran the prefill
         self.stats.observe("prefill", tail_len, dt)
+        ev = None
         if self.tel:
-            self.tel.record("prefill", dt, tail_len, {slot.index: req},
-                            extra={"cached_tokens": cached} if cached else None)
+            ev = self.tel.record("prefill", dt, tail_len, {slot.index: req},
+                                 extra={"cached_tokens": cached} if cached else None)
+        psp.update(bucket=(bucket_for(tail_len, self.buckets)
+                           if self.buckets else tail_len),
+                   cached_tokens=cached, computed_tokens=tail_len,
+                   window=ev.window if ev is not None else -1)
+        psp.end()
         self.slots.assign(slot, req, first)
+        if self.tracer is not None:
+            # lifecycle span 3: decode residency — closed by _finish with
+            # the finish reason and attributed joules
+            self._req_spans[req.req_id] = self.tracer.begin(
+                "decode", track=f"req{req.req_id}", req_id=req.req_id,
+                slot=slot.index)
         self._emit(slot, first)   # prefill samples the first token
 
     def _prefill_paged(self, slot, req: Request, prompt: np.ndarray):
@@ -615,6 +728,9 @@ class ContinuousEngine:
             req.done = True
             req.finish_reason = "pages"
             self.finished.append(req)
+            self.metrics.counter("requests_finished",
+                                 "requests by finish reason").inc(
+                reason="pages")
             return None, 0
         tail = prompt[start:]
         table_row = jnp.asarray(self.pages.table_row(slot.index))
@@ -649,25 +765,44 @@ class ContinuousEngine:
         active = self.slots.active_slots()
         if not active:
             return
-        tokens = jnp.asarray(self.slots.batch_tokens())
-        pos = jnp.asarray(self.slots.batch_positions())
-        t0 = time.perf_counter()
+        # per-step engine span: queue depth + pool occupancy gauges ride on
+        # it, and the step's sample window is referenced for the timeline's
+        # exact joule partition
+        depth = len(self.queue)
+        free = self.pages.free_blocks() if self.pages is not None else -1
+        evictable = (self.prefix.evictable_blocks()
+                     if self.prefix is not None else -1)
+        self.metrics.gauge("queue_depth").set(depth)
         if self.pages is not None:
-            tables = jnp.asarray(self.pages.tables)
-            next_tok, _, self.caches = self._decode(self.params, tokens, pos,
-                                                    tables, self.caches)
-        else:
-            next_tok, _, self.caches = self._decode(self.params, tokens, pos,
-                                                    self.caches)
-        # dalek: allow[host-sync] the designed once-per-step [B,1] fetch (EOS/budget checks)
-        toks = np.asarray(next_tok)
-        dt = time.perf_counter() - t0
-        self._decode_s += dt
-        self._decode_steps += 1
-        self.stats.observe("decode", len(active), dt)
-        if self.tel:
-            self.tel.record("decode", dt, len(active),
-                            {s.index: s.req for s in active})
+            self.metrics.gauge("kv_free_blocks").set(free)
+        if self.prefix is not None:
+            self.metrics.gauge("kv_evictable_blocks").set(evictable)
+        step_cm = (self.tracer.span(
+            "decode_step", track="engine", active=len(active),
+            queue_depth=depth, free_blocks=free, evictable_blocks=evictable)
+            if self.tracer is not None else contextlib.nullcontext(NULL_SPAN))
+        with step_cm as ssp:
+            tokens = jnp.asarray(self.slots.batch_tokens())
+            pos = jnp.asarray(self.slots.batch_positions())
+            t0 = time.perf_counter()
+            if self.pages is not None:
+                tables = jnp.asarray(self.pages.tables)
+                next_tok, _, self.caches = self._decode(
+                    self.params, tokens, pos, tables, self.caches)
+            else:
+                next_tok, _, self.caches = self._decode(
+                    self.params, tokens, pos, self.caches)
+            # dalek: allow[host-sync] the designed once-per-step [B,1] fetch (EOS/budget checks)
+            toks = np.asarray(next_tok)
+            dt = time.perf_counter() - t0
+            self.metrics.histogram("decode_step_s",
+                                   "fused decode step wall seconds").observe(dt)
+            self.stats.observe("decode", len(active), dt)
+            if self.tel:
+                ev = self.tel.record("decode", dt, len(active),
+                                     {s.index: s.req for s in active})
+                if ev is not None:
+                    ssp.set("window", ev.window)
         for s in active:
             s.req.decode_steps += 1
             tok = int(toks[s.index, 0])
@@ -697,18 +832,24 @@ class ContinuousEngine:
             if self.slots.n_active == 0:
                 break
             self._decode_once()
+        # run stats are read back out of the metrics registry — the same
+        # store --metrics-json snapshots and prometheus() exposes
+        n_emitted = int(self.metrics.counter("tokens_decoded").total())
+        dec = self.metrics.histogram("decode_step_s")
+        pre = self.metrics.histogram("prefill_step_s")
         stats = {
             "completed": len(self.finished),
             "shed": self.queue.n_shed,
-            "tokens_decoded": self._n_emitted,
-            "prefill_s": self._prefill_s,
-            "decode_s": self._decode_s,
-            "decode_steps": self._decode_steps,
-            "decode_tok_per_s": (self._n_emitted / self._decode_s
-                                 if self._decode_s else 0.0),
+            "tokens_decoded": n_emitted,
+            "prefill_s": pre.sum(),
+            "decode_s": dec.sum(),
+            "decode_steps": dec.count(),
+            "decode_tok_per_s": (n_emitted / dec.sum()
+                                 if dec.sum() else 0.0),
             "prefills": self.slots.n_assigned,
             "prompt_tokens": self.slots.n_prefill_tokens,
-            "prefill_tokens_computed": self._prefill_computed,
+            "prefill_tokens_computed": int(self.metrics.counter(
+                "prefill_tokens_computed").total()),
             "slots_recycled": self.slots.n_released,
             "peak_active": self.slots.peak_active,
             "dvfs_f_ghz": self.dvfs.f_ghz if self.dvfs else None,
@@ -745,11 +886,10 @@ class ContinuousEngine:
         promises), while the telemetry session's ``compiles/*`` counters
         reset with the samples they annotate."""
         self.finished = []
-        self._n_emitted = 0
-        self._decode_s = 0.0
-        self._prefill_s = 0.0
-        self._decode_steps = 0
-        self._prefill_computed = 0
+        self.metrics.clear()
+        if self.tracer is not None:
+            self.tracer.clear()
+        self._req_spans = {}
         self.queue = RequestQueue()
         self.slots = SlotManager(self.batch_size, self.max_seq)
         if self.prefix is not None:

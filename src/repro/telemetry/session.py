@@ -215,6 +215,13 @@ class MonitorSession:
     def blocks(self) -> List[SampleBlock]:
         return list(self._blocks)
 
+    @property
+    def n_windows(self) -> int:
+        """Sample windows currently held (index space of the next window —
+        the engines stamp this onto their telemetry events *before*
+        sampling, so event ``k`` always describes block ``k``)."""
+        return len(self._blocks)
+
     def block(self) -> SampleBlock:
         """All samples so far as one block."""
         return SampleBlock.concat(self._blocks)

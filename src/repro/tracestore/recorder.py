@@ -25,6 +25,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.cluster.topology import Node, Topology
 from repro.core.probe import REPORT_SPS, ProbeConfig
+from repro.obs import events_to_meta
 from repro.telemetry import MonitorSession, MutableSource
 from repro.tracestore.io import TraceWriter
 
@@ -138,18 +139,20 @@ class ClusterRecorder:
 
 
 def record_session(session: MonitorSession, path, node: str = "node",
-                   events: Optional[List[Dict]] = None,
+                   events: Optional[List] = None,
                    meta: Optional[Dict] = None) -> str:
     """Export a session's accumulated blocks to a single-stream trace.
 
     Each block becomes one chunk, so the session's window boundaries (one
     per ``sample()`` call) survive — ``replay_attribution`` re-drives an
     identical session window by window against the recorded power.
+    ``events`` rows may be typed :class:`repro.obs.TelemetryEvent`\\ s or
+    legacy flat dicts; both serialize to the same meta schema.
     """
     rows = session.probe_rows()
     _, _, _, sps, volts = rows[0]
     m = {"kind": "session", "node": node, "grid_sps": session.grid_sps,
-         "events": list(events or [])}
+         "events": events_to_meta(events or [])}
     m.update(meta or {})
     with TraceWriter(path, meta=m) as w:
         sid = w.add_stream(f"{node}/probe0", node=node, sps=sps, volts=volts)

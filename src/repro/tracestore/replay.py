@@ -34,6 +34,7 @@ import numpy as np
 from repro.cluster.manager import ClusterManager
 from repro.cluster.topology import Topology
 from repro.core.probe import ProbeConfig
+from repro.obs import coerce_event
 from repro.core.scheduler import ThroughputStats
 from repro.serve.queue import AdmissionController
 from repro.telemetry import MonitorSession, SampleBlock, TraceSource
@@ -189,7 +190,7 @@ def replay_attribution(reader: TraceReader,
     bit-equal to the recording (quantization-idempotent probe pipeline), so
     the returned {req_id: joules} reproduces the live attribution exactly.
     """
-    events = reader.meta.get("events", [])
+    events = [coerce_event(e) for e in reader.meta.get("events", [])]
     if not events:
         raise ValueError(
             f"{reader.path} has no telemetry event log — record the run "
@@ -200,10 +201,10 @@ def replay_attribution(reader: TraceReader,
     windows = reader.blocks(sid)
     per_req: Dict[int, float] = {}
     for ev in events:
-        groups: Dict[str, List[int]] = ev["groups"]
+        groups = ev.groups
         source.set_window(next(windows, SampleBlock.empty()))
-        block = session.sample(ev["wall_s"],
-                               tags=[ev["phase"]] + sorted(groups))
+        block = session.sample(ev.wall_s,
+                               tags=[ev.phase] + sorted(groups))
         per_tag = block.split_energy({tg: len(ids)
                                       for tg, ids in groups.items()})
         for tg, ids in groups.items():

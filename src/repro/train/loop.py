@@ -7,6 +7,7 @@ restart (resume from the newest committed checkpoint + step-indexed data).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Dict, Optional
@@ -18,6 +19,7 @@ from repro.checkpoint import ckpt as ckpt_mod
 from repro.core import energy as energy_mod
 from repro.core.hw import TPU_V5E
 from repro.data.pipeline import Prefetcher
+from repro.obs import NULL_SPAN, MetricsRegistry, Tracer
 from repro.telemetry import MonitorSession, MutableSource
 
 
@@ -45,9 +47,17 @@ def make_session(dev=TPU_V5E, node: str = "train-node"):
 def run(train_step, state, data, loop_cfg: LoopConfig,
         shardings=None, batch_shardings=None,
         roofline_terms: Optional[Dict[str, float]] = None,
-        on_step: Optional[Callable] = None):
-    """Run training; returns (state, history)."""
+        on_step: Optional[Callable] = None,
+        tracer: Optional[Tracer] = None,
+        metrics_registry: Optional[MetricsRegistry] = None):
+    """Run training; returns (state, history, summary).
+
+    ``tracer``/``metrics_registry`` plug the loop into the unified
+    observability layer: one ``train_step`` span per step (referencing its
+    energy sample window for the timeline export), ``checkpoint`` spans,
+    and registry-backed counters the launcher can snapshot to JSON."""
     session, power = make_session()
+    m = metrics_registry if metrics_registry is not None else MetricsRegistry()
     dev = TPU_V5E
     saver = ckpt_mod.AsyncSaver()
     start_step = 0
@@ -71,8 +81,11 @@ def run(train_step, state, data, loop_cfg: LoopConfig,
         for step in range(start_step, loop_cfg.total_steps):
             idx, batch = prefetch.next()
             assert idx == step, (idx, step)
+            step_cm = (tracer.span("train_step", track="train", step=step + 1)
+                       if tracer is not None
+                       else contextlib.nullcontext(NULL_SPAN))
             t0 = time.perf_counter()
-            with session.region("train_step"):
+            with step_cm as sp, session.region("train_step"):
                 state, metrics = train_step(state, batch)
                 metrics = jax.tree.map(
                     lambda x: np.asarray(jax.device_get(x)), metrics)
@@ -84,8 +97,16 @@ def run(train_step, state, data, loop_cfg: LoopConfig,
                 # sample the probes across the step's wall time while the
                 # GPIO tag is high (paper: tag-synchronized measurement)
                 power.set(energy_mod.power_w(dev, util, dvfs))
+                sp.set("window", session.n_windows)
                 session.sample(wall)
-            tokens_seen += int(np.prod(batch["tokens"].shape))
+            n_batch_tokens = int(np.prod(batch["tokens"].shape))
+            tokens_seen += n_batch_tokens
+            m.histogram("train_step_s",
+                        "train step wall seconds").observe(wall)
+            m.counter("train_tokens").inc(n_batch_tokens)
+            m.gauge("train_energy_j",
+                    "session joules so far (all chips)").set(
+                session.energy_j() * loop_cfg.n_chips)
             rec = {"step": step + 1, "wall_s": wall,
                    "loss": float(metrics.get("loss", np.nan)),
                    "grad_norm": float(metrics.get("grad_norm", np.nan)),
@@ -95,9 +116,14 @@ def run(train_step, state, data, loop_cfg: LoopConfig,
             if on_step:
                 on_step(rec)
             if loop_cfg.ckpt_dir and (step + 1) % loop_cfg.ckpt_every == 0:
-                with session.region("checkpoint"):
+                ck_cm = (tracer.span("checkpoint", track="train",
+                                     step=step + 1)
+                         if tracer is not None
+                         else contextlib.nullcontext(NULL_SPAN))
+                with ck_cm, session.region("checkpoint"):
                     saver.save(state, loop_cfg.ckpt_dir, step + 1)
                 ckpt_mod.prune(loop_cfg.ckpt_dir, loop_cfg.ckpt_keep)
+                m.counter("checkpoints_saved").inc()
         if loop_cfg.ckpt_dir:
             saver.save(state, loop_cfg.ckpt_dir, loop_cfg.total_steps)
             saver.wait()
@@ -112,5 +138,9 @@ def run(train_step, state, data, loop_cfg: LoopConfig,
         "tokens": tokens_seen,
         "j_per_token": (report.energy_j * loop_cfg.n_chips
                         / max(tokens_seen, 1)),
+        "metrics": m.snapshot(),
+        # the live session rides along (non-JSON) so callers can merge the
+        # span stream with its energy windows in the timeline export
+        "session": session,
     }
     return state, history, summary

@@ -336,6 +336,98 @@ def test_refcount_clean_patterns():
     assert active(fs, "DLK006") == []
 
 
+# -- DLK007 unclosed-span ------------------------------------------------------
+
+
+def test_span_discarded_and_unclosed_flagged():
+    fs = lint("""
+        def a(tracer):
+            tracer.span("prefill")             # result dropped
+
+        def b(tracer):
+            sp = tracer.begin("queued")        # never ended here
+            sp.set("x", 1)
+
+        def c(self):
+            self.tracer.begin("decode")        # result dropped
+    """)
+    act = active(fs, "DLK007")
+    assert len(act) == 3
+    msgs = [f.message for f in act]
+    assert sum("discarded" in m for m in msgs) == 2
+    assert any("'sp'" in m and "unclosed span" in m for m in msgs)
+
+
+def test_span_name_scope_is_per_function():
+    # an .end() in a DIFFERENT function must not excuse b()'s handle
+    fs = lint("""
+        def b(tracer):
+            h = tracer.begin("queued")
+
+        def elsewhere(h):
+            h.end()
+    """)
+    assert len(active(fs, "DLK007")) == 1
+
+
+def test_span_clean_patterns():
+    fs = lint("""
+        import contextlib
+
+        def w(tracer, x):
+            with tracer.span("prefill", bucket=8) as sp:
+                sp.set("window", 3)
+            return x
+
+        def guarded(tracer):
+            cm = (tracer.span("step") if tracer is not None
+                  else contextlib.nullcontext())
+            with cm as sp:
+                pass
+
+        def handle(tracer):
+            sp = tracer.begin("queued")
+            sp.update(shed=True)
+            sp.end()
+
+        class Engine:
+            def submit(self, req):
+                # ownership transferred into the map: another method closes
+                self._req_spans[req.req_id] = self.tracer.begin("queued")
+
+            def open(self):
+                self._sp = self.tracer.begin("epoch")
+
+            def close(self):
+                self._sp.end()
+
+        def transfer(tracer):
+            return tracer.begin("handed-off")
+    """)
+    assert active(fs, "DLK007") == []
+
+
+def test_span_attr_handle_without_end_flagged_and_suppression():
+    fs = lint("""
+        class Engine:
+            def open(self):
+                self._sp = self.tracer.begin("epoch")   # no .end anywhere
+    """)
+    act = active(fs, "DLK007")
+    assert len(act) == 1 and "self._sp" in act[0].message
+    fs = lint("""
+        def a(tracer):
+            tracer.span("x")  # dalek: allow[unclosed-span] fixture
+    """)
+    assert active(fs) == [] and any(
+        f.suppressed and f.code == "DLK007" for f in fs)
+    # rule skips test files (they open dangling spans to probe the tracer)
+    assert active(lint("""
+        def a(tracer):
+            tracer.span("x")
+    """, path="tests/test_x.py")) == []
+
+
 # -- suppression / baseline / CLI ---------------------------------------------
 
 
