@@ -26,6 +26,14 @@ for the CI perf-trajectory artifact; the ``compiles`` fields are what the
 cross-run regression gate (``benchmarks.regression_gate``) pins, and the
 ``hit_rate`` field is gated against decreases the same way.
 
+A mixed-family scenario models the paper's heterogeneous node: one
+request stream alternating between a transformer and an SSM, each served
+by its own continuous engine through the family's ``CacheAdapter``
+(paged-KV vs carried recurrent state). Reports per-family and combined
+tok/s and J/token; the compile counts ride in the rows so the gate pins
+both families' executables — a retrace reintroduced in *either* adapter
+fails CI.
+
 A fourth scenario prices the observability layer itself: the per-step span
 emission cost (microbenched in the exact ``decode_step`` shape the engine
 emits) over the measured mean decode-step wall — the first-order decode
@@ -131,6 +139,37 @@ def make_shared_prefix_requests(cfg, n, prefix_len, tail_len, max_new,
     return out
 
 
+def run_mixed_family(args, transformer):
+    """One interleaved request stream across a heterogeneous pair of
+    engines: even requests hit the transformer (paged-KV adapter), odd
+    requests the SSM (recurrent adapter). Each engine serves its
+    subsequence; combined throughput charges the serialized wall, the
+    host cost of hosting both families."""
+    t_cfg, t_model, t_params = transformer
+    s_cfg = configs.get_smoke(args.family_arch)
+    s_model = build_model(s_cfg)
+    s_params, _ = s_model.init(jax.random.key(0))
+    engines = {
+        "transformer": (t_cfg, ContinuousEngine(
+            t_model, t_params, batch_size=args.batch, max_seq=args.max_seq)),
+        "ssm": (s_cfg, ContinuousEngine(
+            s_model, s_params, batch_size=args.batch, max_seq=args.max_seq)),
+    }
+    stream = [("transformer" if i % 2 == 0 else "ssm", i)
+              for i in range(args.family_requests)]
+    out = {}
+    for key, (cfg, eng) in engines.items():
+        eng.serve(make_requests(cfg, args.batch, args.prompt_len, seed=99))
+        eng.reset_metrics()
+        reqs = make_requests(cfg, args.family_requests, args.prompt_len)
+        mine = [reqs[i] for k, i in stream if k == key]
+        t0 = time.perf_counter()
+        st = eng.serve(mine)
+        st["wall_s"] = time.perf_counter() - t0
+        out[key] = st
+    return out
+
+
 def run_span_overhead(model, params, cfg, args, eng, st):
     """Fractional decode-throughput cost of span emission.
 
@@ -201,6 +240,11 @@ def main(argv=None):
                     help="distinct per-request tail length")
     ap.add_argument("--prefix-max-new", type=int, default=2)
     ap.add_argument("--prefix-max-seq", type=int, default=128)
+    ap.add_argument("--family-arch", default="xlstm-1.3b",
+                    help="recurrent-family arch for the mixed-family "
+                         "scenario")
+    ap.add_argument("--family-requests", type=int, default=8,
+                    help="requests in the interleaved mixed-family stream")
     ap.add_argument("--overhead-repeats", type=int, default=3,
                     help="span-emission microbench repeats (best-of-N "
                          "sheds CI scheduler noise)")
@@ -306,6 +350,31 @@ def main(argv=None):
                 ";".join(f"{k}={v}" for k, v in sorted(aux.items())) or "none",
                 compiles=sum(aux.values()))
 
+    # -- mixed-family scenario: transformer + SSM interleaved --------------
+    fam = run_mixed_family(args, (cfg, model, params))
+
+    def _fam_metrics(st):
+        tps = _e2e_tps(st)
+        jtok = st.get("energy_j", 0.0) / max(st["tokens_decoded"], 1)
+        n_compiles = sum(st.get("compiles", {}).values())
+        return tps, jtok, n_compiles
+
+    fam_rows = {k: _fam_metrics(st) for k, st in fam.items()}
+    for key, (tps, jtok, n_compiles) in sorted(fam_rows.items()):
+        st = fam[key]
+        rows.record(f"serve/mixed_family_{key}", st["wall_s"],
+                    f"{tps:.1f}tok/s_e2e;{jtok:.3f}J/token;"
+                    f"adapter={st['adapter']}",
+                    compiles=n_compiles)
+    fam_wall = sum(st["wall_s"] for st in fam.values())
+    fam_tokens = sum(st["tokens_decoded"] for st in fam.values())
+    fam_j = sum(st.get("energy_j", 0.0) for st in fam.values())
+    fam_tps = fam_tokens / fam_wall if fam_wall else 0.0
+    rows.record("serve/mixed_family", fam_wall,
+                f"{fam_tps:.1f}tok/s_combined;"
+                f"{fam_j / max(fam_tokens, 1):.3f}J/token",
+                compiles=sum(c for _, _, c in fam_rows.values()))
+
     # -- span-overhead scenario: observability must be near-free -----------
     span_cost, step_wall, overhead = run_span_overhead(
         model, params, cfg, args, c_eng, c_st)
@@ -351,6 +420,14 @@ def main(argv=None):
           f"{h_tps:.1f} tok/s e2e, {h_jtok:.3f} J/token")
     print(f"  prefix-cache speedup: {prefix_speedup:.2f}x "
           f"({'PASS' if prefix_speedup >= 2.0 else 'FAIL'} >= 2x gate)")
+    print(f"\nmixed-family scenario ({args.family_requests} requests "
+          f"interleaved transformer/{args.family_arch}):")
+    for key, (tps, jtok, n_compiles) in sorted(fam_rows.items()):
+        print(f"  {key:11s}: {fam[key]['tokens_decoded']} tokens, "
+              f"{tps:.1f} tok/s e2e, {jtok:.3f} J/token, "
+              f"{n_compiles} compiles [{fam[key]['adapter']}]")
+    print(f"  combined   : {fam_tps:.1f} tok/s over the serialized wall, "
+          f"{fam_j / max(fam_tokens, 1):.3f} J/token")
     print(f"\nspan-overhead scenario (best of {args.overhead_repeats} "
           f"microbench repeats):")
     print(f"  decode_step span emission: {span_cost*1e6:.2f} us/step")

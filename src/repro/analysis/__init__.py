@@ -11,6 +11,7 @@ DLK004   jit-kwargs         static/donate argnums wiring errors
 DLK005   untagged-energy    MonitorSession.sample with no region()/tags
 DLK006   refcount-pairing   PagePool block acquired but not consumed/released
 DLK007   unclosed-span      obs.Tracer span opened but never ended
+DLK008   state-reset-pairing  slot released for reuse without adapter reset
 =======  =================  ==================================================
 """
 from repro.analysis.core import (Finding, ModuleContext,  # noqa: F401
@@ -18,5 +19,6 @@ from repro.analysis.core import (Finding, ModuleContext,  # noqa: F401
                                  analyze_source, rule_codes, select_rules)
 # importing the rule modules populates the registry
 from repro.analysis import (rules_energy, rules_host,  # noqa: F401
-                            rules_jit, rules_obs, rules_refcount)
+                            rules_jit, rules_obs, rules_refcount,
+                            rules_state)
 from repro.analysis.baseline import DEFAULT_BASELINE  # noqa: F401

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import build_model
+from repro.models.registry import serving_caps
 from repro.obs import write_chrome_trace
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
 
@@ -46,9 +47,12 @@ def main(argv=None):
                          "families that cannot page), 'off' (contiguous "
                          "per-slot cache), or an explicit size dividing "
                          "max-seq")
-    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+    ap.add_argument("--prefix-cache", default="auto",
+                    choices=["auto", "on", "off"],
                     help="radix prefix cache over prompt blocks (requires "
-                         "paged KV): shared prompt prefixes prefill once")
+                         "paged KV): shared prompt prefixes prefill once; "
+                         "'auto' enables it exactly when the model family "
+                         "supports paged KV")
     ap.add_argument("--trace-out", default=None,
                     help="write a Perfetto/chrome-trace timeline JSON: "
                          "request-lifecycle + engine-step spans with "
@@ -64,12 +68,39 @@ def main(argv=None):
                 else int(args.kv_block_size))
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    caps = serving_caps(cfg)
+    # Fail fast on flag/family combinations the engine would reject later,
+    # with the flag value that fixes them.
+    if args.prefix_cache == "on" and not caps.prefix_cache:
+        ap.error(f"--prefix-cache on: the {cfg.family!r} family serves "
+                 f"through the {caps.kind!r} adapter, which has no paged KV "
+                 f"to share prefixes in (use --prefix-cache auto)")
+    if isinstance(kv_block, int) and not caps.paged_kv:
+        ap.error(f"--kv-block-size {kv_block}: the {cfg.family!r} family "
+                 f"cannot page its cache (use --kv-block-size auto)")
+    if isinstance(buckets, list) and not caps.bucketed_prefill:
+        ap.error(f"--prefill-buckets {args.prefill_buckets}: the "
+                 f"{cfg.family!r} family prefills chunked left-to-right, "
+                 f"not right-padded to buckets (use --prefill-buckets auto)")
+    if args.engine == "static" and caps.kind == "recurrent":
+        ap.error(f"--engine static: the {cfg.family!r} family carries "
+                 f"recurrent state, which right-padded batch prefill would "
+                 f"corrupt (use --engine continuous)")
+    use_prefix = (caps.prefix_cache if args.prefix_cache == "auto"
+                  else args.prefix_cache == "on")
+
     model = build_model(cfg, q_block=min(64, args.prompt_len))
     params, _ = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
+    frames = None
+    if caps.needs_frames:
+        # synthetic encoder frames stand in for a log-mel front-end
+        frames = [rng.standard_normal((cfg.enc_seq, cfg.d_model))
+                  .astype(np.float32) for _ in range(args.requests)]
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new,
+                    frames=frames[i] if frames is not None else None)
             for i in range(args.requests)]
 
     if args.engine == "static":
@@ -94,10 +125,12 @@ def main(argv=None):
                                   power_cap_w=args.power_cap,
                                   prefill_buckets=buckets,
                                   kv_block_size=kv_block,
-                                  prefix_cache=args.prefix_cache == "on")
+                                  prefix_cache=use_prefix)
         stats = engine.serve(reqs)
 
-    print(f"arch={cfg.name} engine={args.engine} reqs={args.requests} "
+    print(f"arch={cfg.name} engine={args.engine} "
+          f"adapter={stats.get('adapter', 'static')} family={cfg.family} "
+          f"reqs={args.requests} "
           f"prefill={stats['prefill_s']*1e3:.0f}ms "
           f"decode={stats['decode_s']*1e3:.0f}ms "
           f"({stats['decode_tok_per_s']:.1f} tok/s)")

@@ -486,6 +486,36 @@ def scatter_cache_slot(caches, update, slot, batch_axis=1):
 
 
 # ---------------------------------------------------------------------------
+# mixed-axis state trees (recurrent serving)
+#
+# Recurrent families stack per-layer state with the batch on DIFFERENT axes
+# per leaf: xlstm mLSTM/conv leaves are [L, B, ...] (axis 1) while its sLSTM
+# leaves are [B, ...] (axis 0); zamba2 mixes [L, B, ...] mamba state with
+# [B, T, ...] attention KV. These helpers take an ``axes`` pytree (same
+# structure as ``state``, int batch-axis per leaf — inferred once by
+# ``serve.state`` from two ``jax.eval_shape``s of ``init_cache``) so one
+# gather/scatter pair serves every family.
+
+
+def gather_state_slot(state, slot, axes):
+    """Extract one batch row of a mixed-axis state tree as a batch-1 tree.
+    ``slot`` may be a traced scalar."""
+    return jax.tree.map(
+        lambda c, ax: lax.dynamic_slice_in_dim(c, slot, 1, ax), state, axes)
+
+
+def scatter_state_slot(state, update, slot, axes):
+    """Write a batch-1 mixed-axis state tree back into one batch row.
+
+    Scattering a freshly-initialized batch-1 template is also how a slot is
+    *reset*: every leaf row is overwritten wholesale, so no stale carried
+    state (or KV) from a prior occupant survives slot reuse."""
+    return jax.tree.map(
+        lambda c, u, ax: lax.dynamic_update_slice_in_dim(
+            c, u.astype(c.dtype), slot, ax), state, update, axes)
+
+
+# ---------------------------------------------------------------------------
 # MLPs
 
 

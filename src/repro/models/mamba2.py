@@ -264,20 +264,32 @@ class Zamba2:
             st[f"attn_{i}"] = (ax, ax)
         return st
 
-    def prefill(self, params, batch, states):
+    def prefill(self, params, batch, states, start_pos=None):
+        """Prefill a chunk at absolute positions [start, start+S).
+
+        Mamba/conv state in ``states`` carries left-to-right across chunks
+        (the conv left-pad and SSD state resume by construction);
+        ``start_pos`` offsets the shared-attention KV writes and RoPE so a
+        prompt can be fed in pow2 chunks without retracing per length."""
         dtype = jnp.dtype(self.cfg.dtype)
         x = common.embed(batch["tokens"], params, dtype)
         x = self.shd(x, "batch", "seq", "act_embed")
-        positions = jnp.arange(x.shape[1])
+        offset = jnp.int32(0) if start_pos is None else start_pos
+        positions = jnp.arange(x.shape[1]) + offset
         x, states = self._stack(x, params, states, positions=positions,
-                                cache_pos=0)
+                                cache_pos=offset)
         return common.unembed(x[:, -1:], params, self.shd), states
 
     def decode_step(self, params, token, pos, states):
+        """One decode step. pos: scalar int32 or [B] int32 (continuous
+        batching: each row decodes at its own attention position)."""
         dtype = jnp.dtype(self.cfg.dtype)
         x = common.embed(token, params, dtype)
         x = self.shd(x, "batch", "seq", "act_embed")
-        positions = jnp.array([0], jnp.int32) + pos
+        if jnp.ndim(pos) == 0:
+            positions = jnp.array([0], jnp.int32) + pos
+        else:
+            positions = pos.astype(jnp.int32)[:, None]   # [B, 1]
         x, states = self._stack(x, params, states, positions=positions,
                                 cache_pos=pos)
         return common.unembed(x, params, self.shd), states

@@ -3,9 +3,14 @@
 ``input_specs(cfg, shape, mesh)`` returns ShapeDtypeStruct stand-ins for every
 model input of a given assigned shape cell — weak-type-correct, shardable, no
 device allocation — consumed by the multi-pod dry-run.
+
+``serving_caps(cfg)`` declares what the serving stack may do with a family —
+the engines and ``serve/state.py`` adapters consult these flags instead of
+``inspect.signature`` sniffing on model methods.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -16,6 +21,48 @@ from repro.models.mamba2 import Zamba2
 from repro.models.transformer import DecoderLM
 from repro.models.whisper import Whisper
 from repro.models.xlstm import XLSTM
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingCaps:
+    """Declared serving capabilities for one model family.
+
+    ``kind`` names the ``CacheAdapter`` backend that owns per-slot state:
+    ``paged-kv`` (flat (k, v) layer caches behind a refcounted PagePool),
+    ``window-ring`` (gemma3 local:global ring caches, contiguous slots), or
+    ``recurrent`` (carried state gather/scatter/reset + chunked prefill).
+    """
+
+    family: str
+    kind: str                      # paged-kv | window-ring | recurrent
+    bucketed_prefill: bool         # right-pad to pow2 bucket + true_len mask
+    paged_kv: bool                 # PagePool block indirection
+    prefix_cache: bool             # radix trie sharing (requires paged_kv)
+    chunked_prefill: bool          # left-to-right start_pos chunk resume
+    needs_frames: bool = False     # audio: requests carry encoder frames
+
+
+def serving_caps(cfg: ModelConfig) -> ServingCaps:
+    """Declared capability flags for ``cfg``'s family (no model needed)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.local_global_period > 0:
+            # gemma3-style local:global — ring caches can't page (yet)
+            return ServingCaps(cfg.family, "window-ring",
+                               bucketed_prefill=True, paged_kv=False,
+                               prefix_cache=False, chunked_prefill=False)
+        return ServingCaps(cfg.family, "paged-kv",
+                           bucketed_prefill=True, paged_kv=True,
+                           prefix_cache=True, chunked_prefill=True)
+    if cfg.family in ("ssm", "hybrid"):
+        return ServingCaps(cfg.family, "recurrent",
+                           bucketed_prefill=False, paged_kv=False,
+                           prefix_cache=False, chunked_prefill=True)
+    if cfg.family == "audio":
+        return ServingCaps(cfg.family, "recurrent",
+                           bucketed_prefill=False, paged_kv=False,
+                           prefix_cache=False, chunked_prefill=True,
+                           needs_frames=True)
+    raise ValueError(f"unknown family {cfg.family}")
 
 
 def build_model(cfg: ModelConfig, mesh=None, **kw):

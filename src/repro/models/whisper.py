@@ -20,10 +20,11 @@ from repro.parallel.sharding import Sharder
 
 
 def sinusoid(positions, d_model, dtype):
+    """Sinusoidal embeddings for positions of any shape: [...,] -> [..., D]."""
     half = d_model // 2
     freqs = jnp.exp(-np.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
                     / max(half - 1, 1))
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
 
 
@@ -159,7 +160,9 @@ class Whisper:
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
         x = common.embed(tokens, params, dtype)
-        x = x + sinusoid(positions, cfg.d_model, dtype)[None]
+        pe = sinusoid(positions, cfg.d_model, dtype)
+        # positions: [S] (shared across the batch) or [B, S] (per-row decode)
+        x = x + (pe[None] if positions.ndim == 1 else pe)
         return self.shd(x, "batch", "seq", "act_embed")
 
     def build_cross_cache(self, params, enc_out):
@@ -193,23 +196,38 @@ class Whisper:
         ax_cross = ("layers", "batch", None, "act_heads", None)
         return {"self": (ax_self, ax_self), "cross": (ax_cross, ax_cross)}
 
-    def prefill(self, params, batch, caches):
-        enc_out = self.encode(params, batch["frames"])
-        xk, xv = self.build_cross_cache(params, enc_out)
+    def prefill(self, params, batch, caches, start_pos=None):
+        """Prefill decoder tokens at absolute positions [start, start+S).
+
+        ``batch["frames"]`` is required on the first chunk (encodes audio
+        and fills ``caches["cross"]``); later chunks omit it and reuse the
+        carried cross cache, so a long transcript prompt can be fed in pow2
+        chunks without re-encoding."""
         caches = dict(caches)
-        caches["cross"] = (xk.astype(caches["cross"][0].dtype),
-                           xv.astype(caches["cross"][1].dtype))
-        positions = jnp.arange(batch["tokens"].shape[1])
+        if batch.get("frames") is not None:
+            enc_out = self.encode(params, batch["frames"])
+            xk, xv = self.build_cross_cache(params, enc_out)
+            caches["cross"] = (xk.astype(caches["cross"][0].dtype),
+                               xv.astype(caches["cross"][1].dtype))
+        cc = (caches["cross"][0].astype(jnp.dtype(self.cfg.dtype)),
+              caches["cross"][1].astype(jnp.dtype(self.cfg.dtype)))
+        offset = jnp.int32(0) if start_pos is None else start_pos
+        positions = jnp.arange(batch["tokens"].shape[1]) + offset
         x = self._embed_dec(params, batch["tokens"], positions)
-        x, ys = self._decoder_stack(x, params, enc_out, positions=positions,
-                                    caches=caches["self"], cache_pos=0,
-                                    cross_cache=caches["cross"])
+        x, ys = self._decoder_stack(x, params, None, positions=positions,
+                                    caches=caches["self"], cache_pos=offset,
+                                    cross_cache=cc)
         caches["self"] = ys
         return common.unembed(x[:, -1:], params, self.shd), caches
 
     def decode_step(self, params, token, pos, caches):
+        """One decode step. pos: scalar int32 or [B] int32 (continuous
+        batching: each row decodes at its own position)."""
         cfg = self.cfg
-        positions = jnp.array([0], jnp.int32) + pos
+        if jnp.ndim(pos) == 0:
+            positions = jnp.array([0], jnp.int32) + pos
+        else:
+            positions = pos.astype(jnp.int32)[:, None]   # [B, 1]
         x = self._embed_dec(params, token, positions)
         cc = (caches["cross"][0].astype(jnp.dtype(cfg.dtype)),
               caches["cross"][1].astype(jnp.dtype(cfg.dtype)))

@@ -60,6 +60,11 @@ def _causal_conv(x, w, state=None):
     out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
               for i in range(width))
     new_state = xp[:, -(width - 1):]
+    if state is not None:
+        # Keep the carried-state dtype stable across steps: init_cache
+        # allocates float32, and a drifting dtype changes the abstract
+        # signature of the fused decode step, forcing a retrace.
+        new_state = new_state.astype(state.dtype)
     return out, new_state
 
 
@@ -360,7 +365,11 @@ class XLSTM:
             st[f"slstm_{i}"] = (ax, ax, ax, ax)
         return st
 
-    def prefill(self, params, batch, states):
+    def prefill(self, params, batch, states, start_pos=None):
+        """Prefill a chunk; carried state in ``states`` resumes across
+        chunks (mLSTM/sLSTM are position-free, so ``start_pos`` is
+        accepted for the uniform chunked-prefill signature and ignored)."""
+        del start_pos  # recurrent: position-free
         dtype = jnp.dtype(self.cfg.dtype)
         x = common.embed(batch["tokens"], params, dtype)
         x = self.shd(x, "batch", "seq", "act_embed")

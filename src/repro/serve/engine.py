@@ -8,27 +8,30 @@ with power traces *derived* from the roofline/DVFS energy model
 ``ServeEngine``      static-batch baseline: one padded prefill, lock-step
                      decode until every request in the batch finishes.
 ``ContinuousEngine`` true continuous batching: admission-controlled request
-                     queue, per-slot KV-cache state, fused jitted decode with
-                     per-slot positions (one host sync per step), slot
-                     recycling so new requests join mid-decode, per-request
-                     J/token attribution via GPIO slot tags, and an
-                     energy-aware admission policy (DVFS power capping +
-                     TTL shedding from measured throughput).
+                     queue, per-slot state behind a ``serve.state``
+                     ``CacheAdapter`` (paged KV, window rings, or recurrent
+                     carried state — selected by the family's declared
+                     ``ServingCaps``), fused jitted decode with per-slot
+                     positions (one host sync per step), slot recycling so
+                     new requests join mid-decode, per-request J/token
+                     attribution via GPIO slot tags, and an energy-aware
+                     admission policy (DVFS power capping + TTL shedding
+                     from measured throughput).
 
-Both engines bucket prefill lengths by default (``prefill_buckets="auto"``:
-power-of-two edges up to ``max_seq``): prompts are right-padded to the
-bucket edge so the number of compiled prefill executables is bounded by the
-bucket count instead of growing with every distinct prompt length. Every
-jitted step runs through ``serve.step.counting_jit``; compile counts are
-exposed in the run stats (``prefill_compiles``/``decode_compiles``), as
-telemetry counters on the ``MonitorSession`` report, and regression-gated
-in CI — unbounded compilation silently dominates the J/token numbers the
-platform exists to measure.
+The engine never inspects model methods or cache layouts: every family in
+``repro.configs`` — transformers (paged or ring), SSM/hybrid, whisper —
+serves through the same loop, and the adapter owns the layout-specific
+steps. Prefill compile counts stay bounded (bucket edges for the
+transformer families, power-of-two chunk sizes for the recurrent ones);
+every jitted step runs through ``serve.step.counting_jit`` and the counts
+are exposed in the run stats (``prefill_compiles``/``decode_compiles``),
+as telemetry counters on the ``MonitorSession`` report, and
+regression-gated in CI — unbounded compilation silently dominates the
+J/token numbers the platform exists to measure.
 """
 from __future__ import annotations
 
 import contextlib
-import inspect
 import time
 from typing import Dict, List, Optional
 
@@ -40,76 +43,16 @@ from repro.core.energy import ServePowerModel
 from repro.core.hw import DeviceSpec, TPU_V5E
 from repro.core.scheduler import ThroughputStats
 from repro.core.tags import N_GPIO
-from repro.models.common import reset_cache_slot
 from repro.obs import NULL_SPAN, MetricsRegistry, TelemetryEvent, Tracer
-from repro.serve.paging import (PagePool, RadixPrefixCache,
-                                resolve_kv_block_size)
 from repro.serve.queue import AdmissionController, Request, RequestQueue
 from repro.serve.slots import SlotManager
+from repro.serve.state import make_adapter, resolve_buckets
 from repro.serve.step import (TraceStats, bucket_for, counting_jit,
-                              make_block_ops, make_decode_step,
-                              make_paged_decode_step, make_paged_slot_prefill,
-                              make_prefill_step, make_slot_prefill,
-                              pad_to_bucket)
-from repro.serve.step import prefill_buckets as auto_prefill_buckets
+                              make_decode_step, make_prefill_step)
 from repro.telemetry import ModelSource, MonitorSession
 
-__all__ = ["Request", "ServeEngine", "ContinuousEngine", "EngineTelemetry"]
-
-
-def supports_bucketed_prefill(model) -> bool:
-    """True when ``model.prefill`` accepts the ``true_len`` kwarg.
-
-    The transformer families (dense/MoE/VLM, gemma3 windows) do; the
-    recurrent-state families (SSM/hybrid, whisper) prefill sequentially and
-    cannot right-pad — a pad tail would corrupt the carried state."""
-    try:
-        sig = inspect.signature(model.prefill)
-    except (TypeError, ValueError):
-        return False
-    return "true_len" in sig.parameters
-
-
-def supports_paged_cache(model) -> bool:
-    """True when the model can serve through a paged KV pool: flat stacked
-    (k, v) caches plus chunked prefill (``start_pos``). The gemma3
-    local:global families keep window *ring* caches — a ring can't resume
-    mid-stream, so they stay on the contiguous per-slot path; recurrent
-    families carry state, not KV, and can't page at all."""
-    try:
-        sig = inspect.signature(model.prefill)
-    except (TypeError, ValueError):
-        return False
-    if "start_pos" not in sig.parameters:
-        return False
-    sds = jax.eval_shape(lambda: model.init_cache(1, 8))
-    return not isinstance(sds, dict)
-
-
-def resolve_buckets(spec, max_seq: int, model=None):
-    """Normalize a ``prefill_buckets`` argument.
-
-    ``"auto"``/True -> power-of-two edges up to ``max_seq``; ``None``/
-    ``"off"``/False -> bucketing disabled (exact-length prefill, one
-    executable per distinct length); an iterable -> explicit edges (sorted,
-    deduped, capped at ``max_seq``). With a ``model``, ``"auto"`` silently
-    degrades to off when the model cannot prefill under right-pad
-    (``supports_bucketed_prefill``); explicitly requested edges raise."""
-    if spec in (None, False, "off", "none"):
-        return None
-    supported = model is None or supports_bucketed_prefill(model)
-    if spec in (True, "auto"):
-        return auto_prefill_buckets(max_seq) if supported else None
-    if not supported:
-        raise ValueError(
-            f"{type(model).__name__}.prefill takes no true_len: this family "
-            "cannot use length-bucketed prefill (pass prefill_buckets='off')")
-    edges = sorted({min(int(b), max_seq) for b in spec if int(b) >= 1})
-    if not edges:
-        raise ValueError(f"no usable prefill buckets in {spec!r}")
-    if edges[-1] < max_seq:
-        edges.append(max_seq)     # every admissible prompt must fit a bucket
-    return tuple(edges)
+__all__ = ["Request", "ServeEngine", "ContinuousEngine", "EngineTelemetry",
+           "resolve_buckets"]
 
 
 def _count_params(params) -> float:
@@ -387,7 +330,7 @@ class ServeEngine:
 
 
 class ContinuousEngine:
-    """Continuous batching over one shared KV cache.
+    """Continuous batching over one shared per-slot state store.
 
     Requests queue up (``submit``) and ``run`` drains them: free slots are
     filled via single-slot prefills (other slots keep their in-flight
@@ -396,6 +339,11 @@ class ContinuousEngine:
     fetch), and a slot is recycled the moment its request hits EOS or its
     token budget — so late requests join mid-decode instead of waiting for
     the batch to drain.
+
+    All per-slot state handling (paged KV pool, contiguous window rings,
+    recurrent carried state) lives behind ``self.adapter``
+    (``serve.state.CacheAdapter``), selected by the model family's declared
+    ``ServingCaps`` — the engine body is family-agnostic.
     """
 
     def __init__(self, model, params, *, batch_size: int, max_seq: int,
@@ -409,42 +357,18 @@ class ContinuousEngine:
         self.params = params
         self.batch_size = batch_size
         self.max_seq = max_seq
-        self.buckets = resolve_buckets(prefill_buckets, max_seq, model)
         self.trace_stats = TraceStats()
-        # paged KV: the cache is a pool of fixed-size blocks shared by all
-        # slots through per-slot block tables (gather/scatter indirection in
-        # the jitted steps). "auto" degrades to the contiguous per-slot path
-        # for families that can't page (window rings, recurrent state).
-        self.block_size = resolve_kv_block_size(
-            kv_block_size, max_seq, supports_paged_cache(model))
-        if self.block_size:
-            self.n_slot_blocks = max_seq // self.block_size
-            n_blocks = (kv_pool_blocks if kv_pool_blocks is not None
-                        else batch_size * self.n_slot_blocks + 1)
-            self.pages = PagePool(batch_size, self.n_slot_blocks, n_blocks,
-                                  self.block_size)
-            self.prefix = (RadixPrefixCache(self.block_size, self.pages)
-                           if prefix_cache else None)
-            self._decode = counting_jit(
-                make_paged_decode_step(model, greedy), "decode",
-                self.trace_stats, on_compile=self._on_compile)
-            self._prefill_slot = counting_jit(
-                make_paged_slot_prefill(model, bucketed=bool(self.buckets)),
-                "prefill", self.trace_stats, on_compile=self._on_compile)
-            self._zero_blocks, self._copy_block = make_block_ops(
-                self.trace_stats, self._on_compile)
-        else:
-            self.pages = None
-            self.prefix = None
-            self._decode = counting_jit(make_decode_step(model, greedy),
-                                        "decode", self.trace_stats,
-                                        on_compile=self._on_compile)
-            self._prefill_slot = counting_jit(
-                make_slot_prefill(model, bucketed=bool(self.buckets)),
-                "prefill", self.trace_stats, on_compile=self._on_compile)
-        self._reset_slot = counting_jit(reset_cache_slot, "reset_slot",
-                                        self.trace_stats,
-                                        on_compile=self._on_compile)
+        # the family-declared backend: paged KV (flat transformers), window
+        # rings (gemma3) / contiguous fallback, or recurrent carried state.
+        # "auto" arguments degrade where the family can't honor them;
+        # explicit requests on an incapable family raise early.
+        self.adapter = make_adapter(
+            model, params, batch_size=batch_size, max_seq=max_seq,
+            prefill_buckets=prefill_buckets, kv_block_size=kv_block_size,
+            prefix_cache=prefix_cache, kv_pool_blocks=kv_pool_blocks,
+            greedy=greedy, trace_stats=self.trace_stats,
+            on_compile=self._on_compile)
+        self.family = model.cfg.family
         self.pm = ServePowerModel(
             _count_params(params), dev=dev,
             cache_bytes=_cache_bytes(model, batch_size, max_seq))
@@ -462,9 +386,35 @@ class ContinuousEngine:
         self.tel = (EngineTelemetry(self.pm, batch_size,
                                     metrics=self.metrics)
                     if telemetry else None)
-        self.caches = None
+        # every telemetry event / engine-step span carries the backend and
+        # family so Perfetto timelines and .dkt replay can tell paged,
+        # ring, and recurrent slots apart
+        self._slot_attrs = {"adapter": self.adapter.kind,
+                            "family": self.family}
         self.dvfs = self.admission.apply_dvfs(batch_size)
         self.finished: List[Request] = []
+
+    # attribute aliases: the adapter owns the state, but benches/tests/
+    # launchers address it through the engine
+    @property
+    def buckets(self):
+        return self.adapter.buckets
+
+    @property
+    def block_size(self):
+        return self.adapter.block_size
+
+    @property
+    def pages(self):
+        return self.adapter.pages
+
+    @property
+    def prefix(self):
+        return self.adapter.prefix
+
+    @property
+    def caches(self):
+        return self.adapter.caches
 
     def _on_compile(self, name: str):
         if self.tel is not None:
@@ -484,6 +434,12 @@ class ContinuousEngine:
             raise ValueError(
                 f"request {req.req_id}: prompt of {len(req.prompt)} leaves "
                 f"no decode position with max_seq={self.max_seq}")
+        if self.adapter.caps.needs_frames and req.frames is None:
+            raise ValueError(
+                f"request {req.req_id}: family '{self.family}' is "
+                "encoder-decoder — attach encoder frames "
+                "(Request(frames=[enc_seq, d_model])) so the first prefill "
+                "chunk can build the cross-attention cache")
         self.queue.push(req)
         self.metrics.counter("requests_submitted").inc()
         if self.tracer is not None:
@@ -516,67 +472,10 @@ class ContinuousEngine:
         if self.tracer is not None:
             self.tracer.instant("finish", track=f"req{req.req_id}",
                                 req_id=req.req_id, finish_reason=reason)
-        if self.pages is not None:
-            # drop the slot's block refs; blocks whose refcount hits zero
-            # queue for scrubbing and are re-zeroed before any realloc, so
-            # the pool stays bit-identical to a contiguous cache whose slot
-            # rows are reset on release
-            self.pages.release_slot(slot.index)
-        else:
-            # recycle: zero the slot's cache rows so the next occupant
-            # starts clean
-            self.caches = self._reset_slot(self.caches, jnp.int32(slot.index))
+        # release/reset the slot's backend state (page refs dropped and
+        # scrub-queued, or the row reset) so the next occupant starts clean
+        self.adapter.free_slot(slot.index)
         self.slots.release(slot)
-
-    # -- paged-pool bookkeeping ----------------------------------------------
-
-    def _flush_freed(self):
-        """Scrub freed blocks before any realloc. Fixed-width chunks (padded
-        with the null block) keep the jitted zero-kernel at one executable."""
-        pending = self.pages.drain_pending_zero()
-        if not pending:
-            return
-        width = self.n_slot_blocks
-        for i in range(0, len(pending), width):
-            chunk = pending[i:i + width]
-            chunk = chunk + [PagePool.NULL] * (width - len(chunk))
-            self.caches = self._zero_blocks(self.caches,
-                                            jnp.asarray(chunk, jnp.int32))
-
-    def _alloc_block(self) -> Optional[int]:
-        """One zeroed block, evicting cold prefix-cache entries if the free
-        list is dry. Returns None only when every block is live."""
-        self._flush_freed()
-        blk = self.pages.alloc()
-        if blk is None and self.prefix is not None:
-            if self.prefix.evict(1):
-                self._flush_freed()
-                blk = self.pages.alloc()
-        return blk
-
-    def _expected_cached(self, req: Request) -> int:
-        """Prompt span the prefix cache would serve right now (probe only —
-        no refcounts touched, no LRU update). Used to price queued work."""
-        if self.prefix is None:
-            return 0
-        return self.prefix.probe(np.asarray(req.prompt, np.int32))
-
-    def _can_admit_pages(self, req: Request) -> bool:
-        """Head-of-line page check: admit only when the pool can cover the
-        request's worst-case footprint (prompt + budget, capped at max_seq)
-        net of the blocks a prefix-cache hit would share. Evictable trie
-        blocks count as available — ``_alloc_block`` reclaims them on
-        demand. Deferring (not shedding) preserves FIFO order; pages free
-        as active requests finish."""
-        if self.pages is None:
-            return True
-        span = min(len(req.prompt) + req.max_new_tokens, self.max_seq)
-        needed = self.pages.blocks_for(span) \
-            - self._expected_cached(req) // self.block_size
-        available = self.pages.free_blocks()
-        if self.prefix is not None:
-            available += self.prefix.evictable_blocks()
-        return needed <= available
 
     def _emit(self, slot, tok: int):
         req = slot.req
@@ -612,7 +511,7 @@ class ContinuousEngine:
                 # priced at its own measured rate
                 ahead += req.max_new_tokens
                 ahead_prefill += max(
-                    0, len(req.prompt) - self._expected_cached(req))
+                    0, len(req.prompt) - self.adapter.expected_cached(req))
 
     def _admit(self):
         """Fill free slots from the queue, subject to the admission policy
@@ -631,8 +530,8 @@ class ContinuousEngine:
                 break
             if not self.admission.admit(self.slots.n_active, self.batch_size):
                 break                     # defer under the power cap
-            if not self._can_admit_pages(self.queue.peek()):
-                break                     # defer until pages free up
+            if not self.adapter.can_admit(self.queue.peek()):
+                break                     # defer until backend capacity frees
             req = self.queue.pop()
             if req.max_new_tokens <= 0:
                 req.done = True
@@ -646,35 +545,30 @@ class ContinuousEngine:
             self._prefill_into(self.slots.free_slots()[0], req)
 
     def _prefill_into(self, slot, req: Request):
-        prompt = np.asarray(req.prompt, np.int32)
         self._close_req_span(req)        # queued span ends at admission
         psp = NULL_SPAN
         if self.tracer is not None:
             self.tracer.instant("admitted", track=f"req{req.req_id}",
                                 req_id=req.req_id, slot=slot.index)
             psp = self.tracer.begin("prefill", track=f"req{req.req_id}",
-                                    req_id=req.req_id, slot=slot.index)
+                                    req_id=req.req_id, slot=slot.index,
+                                    **self._slot_attrs)
         t0 = time.perf_counter()
-        if self.pages is not None:
-            cached, tail_len = self._prefill_paged(slot, req, prompt)
-            if cached is None:
-                psp.update(finish_reason="pages")
-                psp.end()
-                return                   # pool dry: request finished "pages"
-        else:
-            cached, tail_len = 0, len(prompt)
-            if self.buckets:
-                padded, n = pad_to_bucket(prompt, self.buckets)
-                next_tok, _, self.caches = self._prefill_slot(
-                    self.params, jnp.asarray(padded[None, :]), jnp.int32(n),
-                    jnp.int32(slot.index), self.caches)
-            else:
-                next_tok, _, self.caches = self._prefill_slot(
-                    self.params, jnp.asarray(prompt[None, :]),
-                    jnp.int32(slot.index), self.caches)
-            # dalek: allow[host-sync] first sampled token must reach the host to emit/EOS-check
-            self._first_tok = int(np.asarray(next_tok)[0, 0])
-        first = self._first_tok
+        out = self.adapter.prefill(slot.index, req)
+        if out.first_token is None:
+            # backend dry (undersized page pool): the adapter already
+            # dropped the slot's resources; finish the request here
+            req.done = True
+            req.finish_reason = "pages"
+            self.finished.append(req)
+            self.metrics.counter("requests_finished",
+                                 "requests by finish reason").inc(
+                reason="pages")
+            psp.update(finish_reason="pages")
+            psp.end()
+            return
+        first, cached, tail_len = (out.first_token, out.cached_tokens,
+                                   out.computed_tokens)
         dt = time.perf_counter() - t0
         req.prefill_s = dt
         req.cached_prompt_tokens = cached
@@ -690,8 +584,11 @@ class ContinuousEngine:
         self.stats.observe("prefill", tail_len, dt)
         ev = None
         if self.tel:
+            extra = dict(self._slot_attrs)
+            if cached:
+                extra["cached_tokens"] = cached
             ev = self.tel.record("prefill", dt, tail_len, {slot.index: req},
-                                 extra={"cached_tokens": cached} if cached else None)
+                                 extra=extra)
         psp.update(bucket=(bucket_for(tail_len, self.buckets)
                            if self.buckets else tail_len),
                    cached_tokens=cached, computed_tokens=tail_len,
@@ -706,62 +603,12 @@ class ContinuousEngine:
                 slot=slot.index)
         self._emit(slot, first)   # prefill samples the first token
 
-    def _prefill_paged(self, slot, req: Request, prompt: np.ndarray):
-        """Paged prefill: map the matched prefix (zero compute), allocate
-        blocks for the unmatched prompt span, run a chunked prefill over
-        the tail only, then offer the full prompt blocks to the trie. Returns ``(cached_tokens, tail_len)`` or
-        ``(None, 0)`` when the pool is dry (request finished, reason
-        "pages" — only possible with an explicitly undersized pool; the
-        admission check covers the default sizing)."""
-        matched = (self.prefix.match(prompt)
-                   if self.prefix is not None else [])
-        if matched:
-            self.pages.map_shared(slot.index, matched)
-        start = len(matched) * self.block_size
-        # back only the prompt here; decode grows the table block-by-block
-        # (``ensure_writable``) so a request that stops early never claims
-        # its worst-case footprint — the admission check already reserved
-        # headroom for it
-        if not self.pages.ensure_capacity(slot.index, len(prompt),
-                                          self._alloc_block):
-            self.pages.release_slot(slot.index)
-            req.done = True
-            req.finish_reason = "pages"
-            self.finished.append(req)
-            self.metrics.counter("requests_finished",
-                                 "requests by finish reason").inc(
-                reason="pages")
-            return None, 0
-        tail = prompt[start:]
-        table_row = jnp.asarray(self.pages.table_row(slot.index))
-        if self.buckets:
-            padded, n = pad_to_bucket(tail, self.buckets)
-            next_tok, _, self.caches = self._prefill_slot(
-                self.params, jnp.asarray(padded[None, :]), jnp.int32(n),
-                jnp.int32(start), table_row, self.caches)
-        else:
-            next_tok, _, self.caches = self._prefill_slot(
-                self.params, jnp.asarray(tail[None, :]), jnp.int32(start),
-                table_row, self.caches)
-        # dalek: allow[host-sync] first sampled token must reach the host to emit/EOS-check
-        self._first_tok = int(np.asarray(next_tok)[0, 0])
-        if self.prefix is not None:
-            self.prefix.insert(prompt, self.pages.table_row(slot.index))
-        return start, len(tail)
-
     def _decode_once(self):
-        if self.pages is not None:
-            # back every active slot's write position before the fused step:
-            # fresh block on a boundary, COW if (defensively) shared, finish
-            # "pages" when the pool is dry
-            for s in list(self.slots.active_slots()):
-                state, src, dst = self.pages.ensure_writable(
-                    s.index, s.pos, self._alloc_block)
-                if state == "cow":
-                    self.caches = self._copy_block(
-                        self.caches, jnp.int32(src), jnp.int32(dst))
-                elif state == "oom":
-                    self._finish(s, "pages")
+        # pre-step backend bookkeeping (paged: back every active write
+        # position, COW defensively-shared blocks); slots the backend can
+        # no longer cover finish "pages"
+        for s in self.adapter.begin_step(list(self.slots.active_slots())):
+            self._finish(s, "pages")
         active = self.slots.active_slots()
         if not active:
             return
@@ -769,9 +616,7 @@ class ContinuousEngine:
         # it, and the step's sample window is referenced for the timeline's
         # exact joule partition
         depth = len(self.queue)
-        free = self.pages.free_blocks() if self.pages is not None else -1
-        evictable = (self.prefix.evictable_blocks()
-                     if self.prefix is not None else -1)
+        free, evictable = self.adapter.pool_gauges()
         self.metrics.gauge("queue_depth").set(depth)
         if self.pages is not None:
             self.metrics.gauge("kv_free_blocks").set(free)
@@ -779,19 +624,14 @@ class ContinuousEngine:
             self.metrics.gauge("kv_evictable_blocks").set(evictable)
         step_cm = (self.tracer.span(
             "decode_step", track="engine", active=len(active),
-            queue_depth=depth, free_blocks=free, evictable_blocks=evictable)
+            queue_depth=depth, free_blocks=free, evictable_blocks=evictable,
+            **self._slot_attrs)
             if self.tracer is not None else contextlib.nullcontext(NULL_SPAN))
         with step_cm as ssp:
             tokens = jnp.asarray(self.slots.batch_tokens())
             pos = jnp.asarray(self.slots.batch_positions())
             t0 = time.perf_counter()
-            if self.pages is not None:
-                tables = jnp.asarray(self.pages.tables)
-                next_tok, _, self.caches = self._decode(
-                    self.params, tokens, pos, tables, self.caches)
-            else:
-                next_tok, _, self.caches = self._decode(
-                    self.params, tokens, pos, self.caches)
+            next_tok = self.adapter.decode_step(tokens, pos)
             # dalek: allow[host-sync] the designed once-per-step [B,1] fetch (EOS/budget checks)
             toks = np.asarray(next_tok)
             dt = time.perf_counter() - t0
@@ -800,7 +640,8 @@ class ContinuousEngine:
             self.stats.observe("decode", len(active), dt)
             if self.tel:
                 ev = self.tel.record("decode", dt, len(active),
-                                     {s.index: s.req for s in active})
+                                     {s.index: s.req for s in active},
+                                     extra=dict(self._slot_attrs))
                 if ev is not None:
                     ssp.set("window", ev.window)
         for s in active:
@@ -817,16 +658,7 @@ class ContinuousEngine:
 
     def run(self) -> Dict:
         """Drain the queue; returns aggregate + per-request stats."""
-        if self.caches is None:
-            if self.pages is not None:
-                # the "batch" axis of the cache is the POOL of blocks, each
-                # block_size positions long; slots see contiguous views
-                # through their block tables
-                self.caches = self.model.init_cache(self.pages.n_blocks,
-                                                    self.block_size)
-            else:
-                self.caches = self.model.init_cache(self.batch_size,
-                                                    self.max_seq)
+        self.adapter.ensure_ready()       # lazy state allocation
         while True:
             self._admit()
             if self.slots.n_active == 0:
@@ -855,18 +687,15 @@ class ContinuousEngine:
             "dvfs_f_ghz": self.dvfs.f_ghz if self.dvfs else None,
             "prefill_compiles": self.trace_stats.compiles("prefill"),
             "decode_compiles": self.trace_stats.compiles("decode"),
-            # every executable family the engine traced — incl. the pool
-            # maintenance ops (reset_slot / zero_blocks / copy_block)
+            # every executable family the engine traced — incl. the state
+            # maintenance ops (reset_slot / state_scatter / zero_blocks /
+            # copy_block)
             "compiles": self.trace_stats.snapshot(),
             "prefill_buckets": list(self.buckets) if self.buckets else None,
-            "kv_block_size": self.block_size,
+            "adapter": self.adapter.kind,
+            "family": self.family,
         }
-        if self.pages is not None:
-            pg = self.pages.stats.as_dict()
-            pg["free_blocks"] = self.pages.free_blocks()
-            stats["kv_pages"] = pg
-        if self.prefix is not None:
-            stats["prefix_cache"] = self.prefix.stats.as_dict()
+        stats.update(self.adapter.run_stats())   # kv_block_size, kv_pages, …
         if self.tel:
             stats.update(self.tel.energy_stats())
         return stats
@@ -892,14 +721,11 @@ class ContinuousEngine:
         self._req_spans = {}
         self.queue = RequestQueue()
         self.slots = SlotManager(self.batch_size, self.max_seq)
-        if self.prefix is not None:
-            # cold prefix cache: a benchmark's measured phase must not reap
-            # hits the warmup planted (the warmup's *compiles* are exactly
-            # what reset keeps — same policy as trace_stats below)
-            self.prefix.clear()
-        if self.pages is not None:
-            self.pages.stats = type(self.pages.stats)(
-                total_blocks=self.pages.stats.total_blocks)
+        # backend statistics reset (prefix trie cleared, pool stats zeroed):
+        # a benchmark's measured phase must not reap hits the warmup planted
+        # (the warmup's *compiles* are exactly what reset keeps — same
+        # policy as trace_stats below)
+        self.adapter.reset_metrics()
         if self.tel:
             self.tel.session.reset()
             self.tel.events = []       # event log tracks the sample stream

@@ -30,6 +30,7 @@ class Request:
     prompt: np.ndarray              # [S] int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    frames: Optional[np.ndarray] = None  # audio: [enc_seq, D] encoder frames
     ttl_s: Optional[float] = None   # shed if predicted wait exceeds this
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False

@@ -428,6 +428,63 @@ def test_span_attr_handle_without_end_flagged_and_suppression():
     """, path="tests/test_x.py")) == []
 
 
+# -- DLK008 state-reset-pairing ------------------------------------------------
+
+
+def test_state_release_without_reset_flagged():
+    fs = lint("""
+        class Engine:
+            def finish(self, slot):
+                self.slots.release(slot)
+    """)
+    act = active(fs, "DLK008")
+    assert len(act) == 1 and "self.slots.release" in act[0].message
+    # bare (non-self) slot-manager receiver fires too
+    fs = lint("""
+        def finish(slots, slot):
+            slots.release(slot)
+    """)
+    assert len(active(fs, "DLK008")) == 1
+
+
+def test_state_release_paired_with_reset_clean():
+    # each adapter-side scrub verb satisfies the pairing
+    for verb in ("free_slot", "release_slot", "reset_cache_slot", "free"):
+        fs = lint(f"""
+            class Engine:
+                def finish(self, slot):
+                    self.adapter.{verb}(slot.index)
+                    self.slots.release(slot)
+        """)
+        assert active(fs, "DLK008") == [], verb
+
+
+def test_state_release_exemptions_and_suppression():
+    # the manager's own release() resets its own bookkeeping — exempt,
+    # and non-slot receivers (elastic pools, locks) never match
+    fs = lint("""
+        class SlotManager:
+            def release(self, slot):
+                slot.req = None
+
+        def drain(self, job):
+            self.elastic.release(job.nodes)
+    """)
+    assert active(fs, "DLK008") == []
+    fs = lint("""
+        def finish(slots, slot):
+            slots.release(slot)  # dalek: allow[state-reset-pairing] fixture
+    """)
+    assert active(fs) == [] and any(
+        f.suppressed and f.code == "DLK008" for f in fs)
+
+
+def test_checked_in_baseline_has_no_state_reset_pairing():
+    # DLK008 mirrors DLK001 policy: fixed, never grandfathered
+    keys = baseline_mod.load()
+    assert not any(code == "DLK008" for code, _, _ in keys)
+
+
 # -- suppression / baseline / CLI ---------------------------------------------
 
 

@@ -27,7 +27,8 @@ except ImportError:
 from repro import configs
 from repro.models import build_model
 from repro.models.common import paged_gather
-from repro.serve.engine import ContinuousEngine, Request, supports_paged_cache
+from repro.models.registry import serving_caps
+from repro.serve.engine import ContinuousEngine, Request
 from repro.serve.paging import (PagePool, RadixPrefixCache,
                                 resolve_kv_block_size)
 from repro.serve.queue import RequestQueue
@@ -308,7 +309,7 @@ def test_paged_matches_contiguous_seeded(dense, paged_steps):
 
 def test_engine_paged_matches_contiguous(dense):
     cfg, model, params = dense
-    assert supports_paged_cache(model)
+    assert serving_caps(model.cfg).paged_kv
     a, b = _mk_reqs(cfg, 4, seed=11), _mk_reqs(cfg, 4, seed=11)
     ea = ContinuousEngine(model, params, batch_size=2, max_seq=48,
                           telemetry=False)                    # paged (auto)
@@ -553,7 +554,7 @@ def test_shed_estimate_prices_net_of_cache(dense):
                            telemetry=False)
     eng.serve(_shared_prefix_reqs(cfg, 1, seed=17))     # warm the trie
     warm = _shared_prefix_reqs(cfg, 2, seed=17)         # 42-token prompts
-    assert eng._expected_cached(warm[0]) == 32          # one 32-block cached
+    assert eng.adapter.expected_cached(warm[0]) == 32          # one 32-block cached
     seen = []
     def spy(req, ahead, ahead_prefill=0):
         seen.append(ahead_prefill)

@@ -21,8 +21,9 @@ except ImportError:
 
 from repro import configs
 from repro.models import build_model
+from repro.models.registry import serving_caps
 from repro.serve.engine import (ContinuousEngine, Request, ServeEngine,
-                                resolve_buckets, supports_bucketed_prefill)
+                                resolve_buckets)
 from repro.serve.queue import RequestQueue
 from repro.serve.step import (TraceStats, bucket_for, counting_jit,
                               make_decode_step, make_slot_prefill,
@@ -108,35 +109,23 @@ def test_resolve_buckets():
         resolve_buckets([], 48)
 
 
-class _RecurrentStub:
-    """Minimal model whose prefill carries recurrent state (no true_len):
-    the shape of the SSM/hybrid/whisper families."""
-
-    def init_cache(self, batch_size, max_seq, dtype=jnp.float32):
-        return jnp.zeros((batch_size, 4), dtype)
-
-    def prefill(self, params, batch, states):
-        logits = jnp.zeros((batch["tokens"].shape[0], 1, 8))
-        return logits, states
-
-    def decode_step(self, params, token, pos, states):
-        return jnp.zeros((token.shape[0], 1, 8)), states
-
-
 def test_auto_bucketing_degrades_for_recurrent_models():
     """Right-pad bucketing would corrupt carried state, so 'auto' falls
     back to exact-length prefill instead of crashing at serve time —
-    and explicitly requested buckets are a loud error."""
-    stub = _RecurrentStub()
-    assert not supports_bucketed_prefill(stub)
-    params = {"w": jnp.ones((2, 2))}
-    eng = ServeEngine(stub, params, batch_size=1, max_seq=8, telemetry=False)
+    and explicitly requested buckets are a loud error. The families
+    *declare* this (``serving_caps``); no model-method sniffing."""
+    cfg = configs.get_smoke("xlstm-1.3b")
+    assert not serving_caps(cfg).bucketed_prefill
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, batch_size=1, max_seq=8,
+                      telemetry=False)
     assert eng.buckets is None
-    eng = ContinuousEngine(stub, params, batch_size=1, max_seq=8,
+    eng = ContinuousEngine(model, params, batch_size=1, max_seq=8,
                            telemetry=False)
     assert eng.buckets is None
-    with pytest.raises(ValueError, match="true_len"):
-        ServeEngine(stub, params, batch_size=1, max_seq=8, telemetry=False,
+    with pytest.raises(ValueError, match="bucketed_prefill"):
+        ServeEngine(model, params, batch_size=1, max_seq=8, telemetry=False,
                     prefill_buckets=[4, 8])
 
 
