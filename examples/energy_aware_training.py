@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.core import energy
+from repro.core.tracing import counting_jit
 from repro.core.hw import TPU_V5E
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.models import build_model
@@ -42,8 +43,9 @@ def main():
     # short real run with telemetry + tags
     params, _ = model.init(jax.random.key(0))
     state = TrainState(params, init_opt_state(params))
-    step = jax.jit(make_train_step(model, OptConfig(lr=1e-3), StepConfig()),
-                   donate_argnums=(0,))
+    step = counting_jit(make_train_step(model, OptConfig(lr=1e-3),
+                                        StepConfig()),
+                        "energy_example_train_step", donate_argnums=(0,))
     data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                       global_batch=2), cfg)
     state, hist, summary = loop_mod.run(

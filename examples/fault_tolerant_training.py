@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.checkpoint import ckpt
+from repro.core.tracing import counting_jit
 from repro.cluster.fault import ElasticTrainOrchestrator, FailureInjector
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.models import build_model
@@ -31,8 +32,9 @@ def main():
         model = build_model(cfg, q_block=16)
         params, _ = model.init(jax.random.key(0))
         state = TrainState(params, init_opt_state(params))
-        step = jax.jit(make_train_step(model, OptConfig(lr=1e-3),
-                                       StepConfig()), donate_argnums=(0,))
+        step = counting_jit(make_train_step(model, OptConfig(lr=1e-3),
+                                            StepConfig()),
+                            "fault_example_train_step", donate_argnums=(0,))
         sessions["cur"] = {"state": state, "step_fn": step, "workers": n_workers}
         print(f"  [build] mesh rebuilt for {n_workers} workers")
         return sessions["cur"]

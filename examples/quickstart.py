@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core.tracing import counting_jit
 from repro.models import build_model
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.step import StepConfig, TrainState, make_train_step
@@ -27,14 +28,17 @@ def main():
 
     # --- train a few steps ---
     state = TrainState(params, init_opt_state(params))
-    step = jax.jit(make_train_step(model, OptConfig(lr=3e-3, warmup_steps=5),
-                                   StepConfig()), donate_argnums=(0,))
+    step = counting_jit(
+        make_train_step(model, OptConfig(lr=3e-3, warmup_steps=5),
+                        StepConfig()),
+        "quickstart_train_step", donate_argnums=(0,))
     data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                       global_batch=4))
     for i in range(10):
         batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
         state, metrics = step(state, batch)
         if i % 3 == 0:
+            # dalek: allow[host-sync] demo prints the loss every 3rd step
             print(f"  step {i}: loss={float(metrics['loss']):.4f}")
 
     # --- serve with the trained weights ---

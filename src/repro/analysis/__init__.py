@@ -3,22 +3,34 @@
 Importing the package registers every rule module; ``python -m
 repro.analysis`` runs the CLI. Rules (see ``--list-rules``):
 
-=======  =================  ==================================================
-DLK001   bare-jit           jax.jit outside counting_jit (compile gate blind)
-DLK002   host-sync          device->host sync inside an engine hot loop
-DLK003   traced-branch      python control flow on a traced value in jit
-DLK004   jit-kwargs         static/donate argnums wiring errors
-DLK005   untagged-energy    MonitorSession.sample with no region()/tags
-DLK006   refcount-pairing   PagePool block acquired but not consumed/released
-DLK007   unclosed-span      obs.Tracer span opened but never ended
-DLK008   state-reset-pairing  slot released for reuse without adapter reset
-=======  =================  ==================================================
+=======  =====================  ==============================================
+DLK001   bare-jit               jax.jit outside counting_jit (compile gate blind)
+DLK002   host-sync              device->host sync inside an engine hot loop
+DLK003   traced-branch          python control flow on a traced value in jit
+DLK004   jit-kwargs             static/donate argnums wiring errors
+DLK005   untagged-energy        MonitorSession.sample with no region()/tags
+DLK006   refcount-pairing       PagePool block acquired but not consumed/released
+DLK007   unclosed-span          obs.Tracer span opened but never ended
+DLK008   state-reset-pairing    slot released for reuse without adapter reset
+DLK009   interproc-host-sync    device value synced inside a helper called from a hot loop
+DLK010   dtype-drift            carry returned in a drifted dtype (decode retrace)
+DLK011   ownership-handoff      block/span handle passed to a non-consuming callee
+DLK012   unguarded-shared-state field accessed both under self._lock and bare
+=======  =====================  ==============================================
+
+DLK009–DLK012 are interprocedural: they read function summaries off a
+:class:`repro.analysis.project.ProjectIndex` (``--project`` on the CLI;
+single-file runs get a one-module index automatically).
 """
 from repro.analysis.core import (Finding, ModuleContext,  # noqa: F401
                                  Rule, all_rules, analyze_paths,
-                                 analyze_source, rule_codes, select_rules)
+                                 analyze_source, check_module, rule_codes,
+                                 select_rules)
+from repro.analysis.project import (FunctionSummary,  # noqa: F401
+                                    ProjectIndex, analyze_project)
 # importing the rule modules populates the registry
-from repro.analysis import (rules_energy, rules_host,  # noqa: F401
-                            rules_jit, rules_obs, rules_refcount,
+from repro.analysis import (rules_dtype, rules_energy,  # noqa: F401
+                            rules_host, rules_interproc, rules_jit,
+                            rules_obs, rules_race, rules_refcount,
                             rules_state)
 from repro.analysis.baseline import DEFAULT_BASELINE  # noqa: F401

@@ -6,8 +6,11 @@ survive line-number churn but die with the offending code. The file is
 JSON, sorted, and deterministic — regenerating it on an unchanged tree
 is a no-op, which is itself under test.
 
-Policy (ISSUE.md): DLK001 findings are *fixed*, never baselined — the
-shipped baseline starts empty and the CI job keeps it honest.
+Policy (ISSUE.md): DLK001, DLK008, DLK009 and DLK010 findings are
+*fixed*, never baselined — an unmetered jit, a leaked slot state, a
+per-iteration host sync, or a retrace-inducing dtype drift is always a
+bug, not a style call. The shipped baseline starts empty and the CI job
+(plus the ``test_checked_in_baseline_has_no_*`` tests) keeps it honest.
 """
 from __future__ import annotations
 

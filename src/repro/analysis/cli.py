@@ -17,8 +17,9 @@ from typing import Dict, List
 from repro.analysis import baseline as baseline_mod
 from repro.analysis.core import (Finding, all_rules, analyze_paths,
                                  rule_codes)
+from repro.analysis.project import analyze_project
 
-DEFAULT_PATHS = ["src", "benchmarks", "tests"]
+DEFAULT_PATHS = ["src", "benchmarks", "examples", "tests"]
 
 
 def _summary(findings: List[Finding]) -> Dict[str, int]:
@@ -55,6 +56,11 @@ def main(argv=None) -> int:
                     "paging discipline")
     ap.add_argument("paths", nargs="*", default=None,
                     help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--project", action="append", default=None,
+                    metavar="DIR", help="whole-program mode: build one "
+                    "ProjectIndex over DIR (repeatable; positional paths "
+                    "join the same project) so interprocedural rules "
+                    "resolve calls across modules")
     ap.add_argument("--select", action="append", default=None,
                     metavar="RULE", help="only these rules (code or slug, "
                     "comma-separable, repeatable)")
@@ -87,9 +93,14 @@ def main(argv=None) -> int:
     def split(vals):
         return [tok for v in vals or () for tok in v.split(",") if tok]
 
-    paths = args.paths or DEFAULT_PATHS
-    findings = analyze_paths(paths, select=split(args.select),
-                             ignore=split(args.ignore))
+    if args.project:
+        roots = args.project + (args.paths or [])
+        findings = analyze_project(roots, select=split(args.select),
+                                   ignore=split(args.ignore))
+    else:
+        paths = args.paths or DEFAULT_PATHS
+        findings = analyze_paths(paths, select=split(args.select),
+                                 ignore=split(args.ignore))
 
     bl_path = args.baseline_file or baseline_mod.DEFAULT_BASELINE
     if args.write_baseline:

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import ast
 import dataclasses
+import hashlib
 import re
 from pathlib import Path
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
@@ -38,6 +39,9 @@ class Finding:
     col: int
     message: str
     line_text: str = ""
+    #: last source line of the reported node's *header* — a pragma anywhere
+    #: in [line, end_line] suppresses (wrapped calls span several lines)
+    end_line: int = 0
     suppressed: bool = False
     baselined: bool = False
 
@@ -165,6 +169,13 @@ class ModuleContext:
         self.lines = source.splitlines()
         self.tree = tree
         self.is_test = bool(_TEST_RE.match(Path(path).name))
+        #: set by :class:`repro.analysis.project.ProjectIndex` — dotted module
+        #: name, per-module import table, and the owning whole-program index.
+        #: ``analyze_source`` builds a one-module index, so interprocedural
+        #: rules see a project even in single-file mode.
+        self.module_name: str = Path(path).stem
+        self.import_table: Dict[str, str] = {}
+        self.project = None  # type: Optional["repro.analysis.project.ProjectIndex"]
         self._parents: Dict[int, ast.AST] = {}
         for parent in ast.walk(tree):
             for child in ast.iter_child_nodes(parent):
@@ -255,9 +266,22 @@ class ModuleContext:
         line = getattr(node, "lineno", 1)
         col = getattr(node, "col_offset", 0)
         text = self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        # pragma span: every line of the *enclosing statement* for
+        # expression findings (a wrapped call can carry its allow[] on the
+        # closing-paren line), but only the *header* for statements with a
+        # body (an allow[] inside an if/with body must not blanket-suppress
+        # the whole block)
+        span = node
+        while span is not None and not isinstance(span, ast.stmt):
+            span = self.parent(span)
+        span = span or node
+        end = getattr(span, "end_lineno", None) or line
+        body = getattr(span, "body", None)
+        if isinstance(body, list) and body and hasattr(body[0], "lineno"):
+            end = max(line, body[0].lineno - 1)
         return Finding(code=rule.code, rule=rule.name, path=self.path,
                        line=line, col=col, message=message,
-                       line_text=text)
+                       line_text=text, end_line=end)
 
 
 # ---------------------------------------------------------------------------
@@ -287,26 +311,40 @@ def suppressions(lines: Sequence[str]) -> Dict[int, Set[str]]:
 
 
 def _is_allowed(finding: Finding, allowed: Dict[int, Set[str]]) -> bool:
-    toks = allowed.get(finding.line, ())
-    return bool(toks) and ("all" in toks or "*" in toks
-                           or finding.rule in toks
-                           or finding.code.lower() in toks)
+    last = max(finding.end_line, finding.line)
+    for line in range(finding.line, last + 1):
+        toks = allowed.get(line, ())
+        if toks and ("all" in toks or "*" in toks
+                     or finding.rule in toks
+                     or finding.code.lower() in toks):
+            return True
+    return False
 
 
 # ---------------------------------------------------------------------------
 # driver
 
+#: parsed-AST cache keyed by source content hash — project mode parses the
+#: whole tree once per *content*, so repeated runs (and the same file reached
+#: through several roots) are free
+_AST_CACHE: Dict[str, ast.Module] = {}
+_AST_CACHE_MAX = 2048
 
-def analyze_source(source: str, path: str,
-                   rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
-    """Run every (selected) rule over one module's source."""
-    try:
+
+def parse_cached(source: str) -> ast.Module:
+    key = hashlib.sha256(source.encode("utf-8", "replace")).hexdigest()
+    tree = _AST_CACHE.get(key)
+    if tree is None:
         tree = ast.parse(source)
-    except SyntaxError as e:
-        return [Finding(code="DLK000", rule="parse-error", path=path,
-                        line=e.lineno or 1, col=e.offset or 0,
-                        message=f"could not parse: {e.msg}")]
-    ctx = ModuleContext(path, source, tree)
+        if len(_AST_CACHE) >= _AST_CACHE_MAX:
+            _AST_CACHE.clear()
+        _AST_CACHE[key] = tree
+    return tree
+
+
+def check_module(ctx: ModuleContext,
+                 rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Run every (selected) rule over one prepared module context."""
     allowed = suppressions(ctx.lines)
     findings: List[Finding] = []
     seen = set()
@@ -324,6 +362,22 @@ def analyze_source(source: str, path: str,
             findings.append(f)
     findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
     return findings
+
+
+def analyze_source(source: str, path: str,
+                   rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Run every (selected) rule over one module's source."""
+    try:
+        tree = parse_cached(source)
+    except SyntaxError as e:
+        return [Finding(code="DLK000", rule="parse-error", path=path,
+                        line=e.lineno or 1, col=e.offset or 0,
+                        message=f"could not parse: {e.msg}")]
+    ctx = ModuleContext(path, source, tree)
+    # a one-module project: interprocedural rules work on single files too
+    from repro.analysis.project import ProjectIndex
+    ProjectIndex([ctx])
+    return check_module(ctx, rules)
 
 
 def iter_py_files(paths: Iterable[str]) -> List[Path]:

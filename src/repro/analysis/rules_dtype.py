@@ -1,0 +1,192 @@
+"""DLK010 dtype-drift — the PR 9 retrace bug class.
+
+``init_cache`` allocates carried state in one dtype (float32); if a step
+function returns the carry after casting it into the *activation* dtype
+(``state.astype(x.dtype)`` for the concat, then returning a slice of the
+result), the carry's abstract signature changes between step 1 and step 2
+and the fused decode step retraces — one silent recompile per model
+family, exactly what ``xlstm._causal_conv`` did before the pin.
+
+The rule runs a per-function three-value lattice over names:
+
+* ``CARRY`` — a parameter whose name looks like carried state
+  (``state``/``carry``/``cache``), or a value pinned back to one
+  (``v.astype(<carry>.dtype)``);
+* ``DRIFT`` — a carry-derived value cast to a *non-carry* dtype
+  (``state.astype(x.dtype)``), propagated through dtype-preserving ops
+  (concatenate/where/pad/…, subscripts, arithmetic);
+* ``OTHER`` — everything else, including explicit literal-dtype casts
+  (``.astype(jnp.float32)``: the author pinned a concrete dtype on
+  purpose) and calls the lattice does not model.
+
+Returning a ``DRIFT`` value is the hazard: the fix is
+``new_state.astype(state.dtype)`` (pin to the init dtype) before the
+return. Fix-only policy, like DLK001: drift findings must be fixed or
+pragma-justified, never baselined.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator
+
+from repro.analysis.core import (Finding, ModuleContext, Rule, qualname,
+                                 register)
+
+OTHER, CARRY, DRIFT = 0, 1, 2
+
+#: parameter-name fragments that mark carried state
+CARRYISH = ("state", "carry", "cache")
+
+#: ops that keep their (widest) input dtype — drift flows through them
+_PRESERVING = {"concatenate", "stack", "where", "pad", "roll", "flip",
+               "maximum", "minimum", "dynamic_update_slice", "expand_dims",
+               "squeeze", "reshape", "transpose", "broadcast_to", "clip",
+               "flipud", "fliplr", "tile", "repeat"}
+
+
+def _carry_params(fn: ast.FunctionDef):
+    args = fn.args
+    return {a.arg for a in args.posonlyargs + args.args
+            if a.arg not in ("self", "cls")
+            and any(t in a.arg.lower() for t in CARRYISH)}
+
+
+def _is_literal_dtype(node) -> bool:
+    """``jnp.float32`` / ``np.dtype("bf16")`` / ``"float32"`` — an explicit
+    concrete dtype, not one borrowed from another array."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return True
+    qn = qualname(node.func if isinstance(node, ast.Call) else node)
+    leaf = qn.rsplit(".", 1)[-1] if qn else ""
+    return leaf.startswith(("float", "bfloat", "int", "uint", "bool",
+                            "complex", "dtype"))
+
+
+class _Lattice:
+    def __init__(self, env: Dict[str, int]):
+        self.env = env
+
+    def eval(self, node) -> int:
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, OTHER)
+        if isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+            return self.eval(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self.eval(node.operand)
+        if isinstance(node, ast.BinOp):
+            # promotion keeps the widest dtype; mixing a carry into
+            # arithmetic is not (by itself) a drift
+            return max(self.eval(node.left), self.eval(node.right))
+        if isinstance(node, ast.IfExp):
+            return max(self.eval(node.body), self.eval(node.orelse))
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return max((self.eval(e) for e in node.elts), default=OTHER)
+        if isinstance(node, ast.Call):
+            return self._eval_call(node)
+        return OTHER
+
+    def _eval_call(self, call: ast.Call) -> int:
+        f = call.func
+        if isinstance(f, ast.Attribute) and f.attr == "astype" and call.args:
+            target = call.args[0]
+            if isinstance(target, ast.Attribute) and target.attr == "dtype":
+                if self.eval(target.value) == CARRY:
+                    return CARRY            # pinned back to the carry dtype
+                if self.eval(f.value) in (CARRY, DRIFT):
+                    return DRIFT            # carry cast to a foreign dtype
+                return OTHER
+            if _is_literal_dtype(target):
+                return OTHER                # concrete dtype chosen on purpose
+            if isinstance(target, ast.Name) \
+                    and self.env.get(target.id, OTHER) == CARRY:
+                return CARRY                # dt = state.dtype; v.astype(dt)
+            if self.eval(f.value) in (CARRY, DRIFT):
+                return DRIFT
+            return OTHER
+        qn = qualname(f)
+        leaf = f.attr if isinstance(f, ast.Attribute) \
+            else (qn.rsplit(".", 1)[-1] if qn else "")
+        if leaf in _PRESERVING:
+            status = max((self.eval(a) for a in call.args), default=OTHER)
+            return max(status,
+                       max((self.eval(kw.value) for kw in call.keywords),
+                           default=OTHER))
+        if isinstance(f, ast.Attribute) and leaf in ("set", "add", "min",
+                                                     "max"):
+            return self.eval(f.value)       # ck.at[i].set(v) keeps ck's dtype
+        return OTHER
+
+
+@register
+class DtypeDrift(Rule):
+    """Carry returned in a drifted dtype — forces a decode retrace."""
+
+    code = "DLK010"
+    name = "dtype-drift"
+    skip_tests = True
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn in ctx.functions:
+            carry = _carry_params(fn)
+            if not carry:
+                continue
+            env = {p: CARRY for p in carry}
+            lat = _Lattice(env)
+            assigns = sorted(
+                (n for n in ast.walk(fn)
+                 if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign))
+                 and ctx.enclosing_function(n) is fn),
+                key=lambda n: (n.lineno, n.col_offset))
+            for node in assigns:
+                if isinstance(node, ast.AugAssign):
+                    if isinstance(node.target, ast.Name):
+                        env[node.target.id] = max(
+                            env.get(node.target.id, OTHER),
+                            lat.eval(node.value))
+                    continue
+                value = node.value
+                if value is None:
+                    continue
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for tgt in targets:
+                    if isinstance(tgt, (ast.Tuple, ast.List)) \
+                            and isinstance(value, (ast.Tuple, ast.List)) \
+                            and len(tgt.elts) == len(value.elts):
+                        for t, v in zip(tgt.elts, value.elts):
+                            if isinstance(t, ast.Name):
+                                env[t.id] = lat.eval(v)
+                    else:
+                        status = lat.eval(value)
+                        elts = tgt.elts if isinstance(
+                            tgt, (ast.Tuple, ast.List)) else [tgt]
+                        for t in elts:
+                            if isinstance(t, ast.Name):
+                                env[t.id] = status
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Return) or node.value is None:
+                    continue
+                if ctx.enclosing_function(node) is not fn:
+                    continue
+                v = node.value
+                elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+                for e in elts:
+                    if lat.eval(e) != DRIFT:
+                        continue
+                    # only the carried slot of the return is the hazard: a
+                    # drift-derived *activation* (e.g. `out = xp * w`) has a
+                    # stable dtype and never feeds the next step's carry
+                    if isinstance(e, ast.Name) and not any(
+                            t in e.id.lower() for t in CARRYISH):
+                        continue
+                    label = e.id if isinstance(e, ast.Name) \
+                        else "a carry value"
+                    yield ctx.finding(
+                        self, node,
+                        f"'{fn.name}' returns {label} cast to a "
+                        "non-carry dtype (via .astype(<activation>"
+                        ".dtype)) — the carried state's abstract "
+                        "signature changes on the next step and the "
+                        "fused step retraces; pin it with "
+                        ".astype(<carry>.dtype) before returning")
+                    break

@@ -188,7 +188,9 @@ class TagBus:
         """(start, end) intervals for a tag; end=None if still high."""
         out: List[Tuple[float, Optional[float]]] = []
         start = None
-        for et, _, n, up in self._events:
+        with self._lock:
+            events = list(self._events)
+        for et, _, n, up in events:
             if n != name:
                 continue
             if up and start is None:

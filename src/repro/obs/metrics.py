@@ -71,7 +71,8 @@ class Counter(_Metric):
             self._values[key] = self._values.get(key, 0.0) + value
 
     def value(self, **labels) -> float:
-        return self._values.get(_label_key(labels), 0.0)
+        with self._lock:
+            return self._values.get(_label_key(labels), 0.0)
 
     def total(self) -> float:
         """Sum across all label sets."""
@@ -102,7 +103,8 @@ class Gauge(_Metric):
             self._values[key] = self._values.get(key, 0.0) + value
 
     def value(self, **labels) -> float:
-        return self._values.get(_label_key(labels), 0.0)
+        with self._lock:
+            return self._values.get(_label_key(labels), 0.0)
 
     def _rows(self):
         return [(key, {"value": v})
@@ -136,10 +138,12 @@ class Histogram(_Metric):
             self._n[key] = self._n.get(key, 0) + 1
 
     def count(self, **labels) -> int:
-        return self._n.get(_label_key(labels), 0)
+        with self._lock:
+            return self._n.get(_label_key(labels), 0)
 
     def sum(self, **labels) -> float:
-        return self._sum.get(_label_key(labels), 0.0)
+        with self._lock:
+            return self._sum.get(_label_key(labels), 0.0)
 
     def _rows(self):
         out = []
@@ -183,10 +187,12 @@ class MetricsRegistry:
         return self._get(Histogram, name, help, buckets=buckets)
 
     def get(self, name: str) -> Optional[_Metric]:
-        return self._metrics.get(name)
+        with self._lock:
+            return self._metrics.get(name)
 
     def __contains__(self, name: str) -> bool:
-        return name in self._metrics
+        with self._lock:
+            return name in self._metrics
 
     # -- snapshots ------------------------------------------------------------
 
@@ -194,8 +200,9 @@ class MetricsRegistry:
         """Deterministic nested dict: metric name -> {kind, help, series}
         with series keyed by the canonical label string."""
         out: Dict = {}
-        for name in sorted(self._metrics):
-            m = self._metrics[name]
+        with self._lock:
+            metrics = sorted(self._metrics.items())
+        for name, m in metrics:
             with m._lock:
                 rows = m._rows()
             out[name] = {"kind": m.kind, "help": m.help,
@@ -218,8 +225,9 @@ class MetricsRegistry:
     def prometheus(self) -> str:
         """Prometheus text exposition (``# HELP``/``# TYPE`` + samples)."""
         lines: List[str] = []
-        for name in sorted(self._metrics):
-            m = self._metrics[name]
+        with self._lock:
+            metrics = sorted(self._metrics.items())
+        for name, m in metrics:
             if m.help:
                 lines.append(f"# HELP {name} {m.help}")
             lines.append(f"# TYPE {name} {m.kind}")

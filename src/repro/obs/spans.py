@@ -234,11 +234,13 @@ class Tracer:
 
     @property
     def n_dropped(self) -> int:
-        return self._n_dropped
+        with self._lock:
+            return self._n_dropped
 
     @property
     def n_started(self) -> int:
-        return self._n_started
+        with self._lock:
+            return self._n_started
 
     def __len__(self) -> int:
         with self._lock:

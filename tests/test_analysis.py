@@ -6,7 +6,8 @@ from pathlib import Path
 
 import pytest
 
-from repro.analysis import analyze_paths, analyze_source, rule_codes
+from repro.analysis import (ProjectIndex, analyze_paths, analyze_project,
+                            analyze_source, rule_codes)
 from repro.analysis import baseline as baseline_mod
 from repro.analysis.cli import gate_rows
 from repro.analysis.cli import main as cli_main
@@ -485,6 +486,542 @@ def test_checked_in_baseline_has_no_state_reset_pairing():
     assert not any(code == "DLK008" for code, _, _ in keys)
 
 
+# -- DLK009 interproc-host-sync ------------------------------------------------
+
+_SYNC_HELPER_MOD = """
+    import jax
+    import numpy as np
+
+    step = jax.jit(lambda x: x)  # dalek: allow[bare-jit] fixture
+
+    def fetch(val):
+        return np.asarray(val)
+
+    def drive(xs):
+        out = []
+        for x in xs:
+            y = step(x)
+            out.append(fetch(y))
+        return out
+"""
+
+
+def test_interproc_sync_same_module_flagged():
+    fs = lint(_SYNC_HELPER_MOD)
+    act = active(fs, "DLK009")
+    assert len(act) == 1
+    assert "fetch" in act[0].message and "syncs" in act[0].message
+
+
+def test_interproc_sync_cross_module_flagged(tmp_path):
+    # the ISSUE acceptance case: the sync is only reachable through a
+    # helper defined in ANOTHER module — DLK002 is structurally blind here
+    (tmp_path / "helpers.py").write_text(textwrap.dedent("""
+        import numpy as np
+
+        def fetch(val):
+            return np.asarray(val)
+    """))
+    (tmp_path / "engine.py").write_text(textwrap.dedent("""
+        import jax
+        from helpers import fetch
+
+        step = jax.jit(lambda x: x)  # dalek: allow[bare-jit] fixture
+
+        def drive(xs):
+            out = []
+            for x in xs:
+                y = step(x)
+                out.append(fetch(y))
+            return out
+    """))
+    fs = analyze_project([str(tmp_path)])
+    act = active(fs, "DLK009")
+    assert len(act) == 1 and act[0].path.endswith("engine.py")
+    assert "fetch" in act[0].message
+
+
+def test_interproc_sync_transitive_and_suppressed(tmp_path):
+    # taint crosses TWO call hops: fetch() -> as_host(); and the pragma at
+    # the call site suppresses
+    (tmp_path / "deep.py").write_text(textwrap.dedent("""
+        import jax
+        import numpy as np
+
+        step = jax.jit(lambda x: x)  # dalek: allow[bare-jit] fixture
+
+        def as_host(v):
+            return np.asarray(v)
+
+        def fetch(val):
+            return as_host(val)
+
+        def drive(xs):
+            for x in xs:
+                y = step(x)
+                z = fetch(y)  # dalek: allow[interproc-host-sync] fixture
+        """))
+    fs = analyze_project([str(tmp_path)])
+    assert active(fs, "DLK009") == []
+    assert any(f.code == "DLK009" and f.suppressed for f in fs)
+    # without the pragma the transitive chain is flagged
+    src = (tmp_path / "deep.py").read_text().replace(
+        "  # dalek: allow[interproc-host-sync] fixture", "")
+    (tmp_path / "deep.py").write_text(src)
+    assert len(active(analyze_project([str(tmp_path)]), "DLK009")) == 1
+
+
+def test_interproc_sync_clean_cases():
+    # helper does not sync -> clean
+    fs = lint("""
+        import jax
+
+        step = jax.jit(lambda x: x)  # dalek: allow[bare-jit] fixture
+
+        def keep(val):
+            return val
+
+        def drive(xs):
+            for x in xs:
+                y = step(x)
+                z = keep(y)
+    """)
+    assert active(fs, "DLK009") == []
+    # helper syncs, but the argument is not a device value -> clean
+    fs = lint("""
+        import numpy as np
+
+        def fetch(val):
+            return np.asarray(val)
+
+        def drive(xs):
+            for x in xs:
+                z = fetch(x)
+    """)
+    assert active(fs, "DLK009") == []
+
+
+def test_checked_in_baseline_has_no_interproc_sync():
+    # DLK009 mirrors DLK001 policy: fixed, never grandfathered
+    keys = baseline_mod.load()
+    assert not any(code == "DLK009" for code, _, _ in keys)
+
+
+# -- DLK010 dtype-drift --------------------------------------------------------
+
+# the pre-PR-9 xlstm._causal_conv bug, verbatim shape: the carry comes back
+# as a slice of the activation-dtype concat — one decode retrace per family
+_PRE_PR9_CONV = """
+    import jax.numpy as jnp
+
+    def causal_conv(x, w, state=None):
+        width = w.shape[0]
+        if state is None:
+            xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+        else:
+            xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        out = xp * w
+        new_state = xp[:, -(width - 1):]
+        return out, new_state
+"""
+
+
+def test_dtype_drift_flags_pre_pr9_conv_carry():
+    fs = lint(_PRE_PR9_CONV)
+    act = active(fs, "DLK010")
+    assert len(act) == 1 and "retraces" in act[0].message
+
+
+def test_dtype_drift_clean_when_pinned():
+    # the PR 9 fix: pin the carry back to its own dtype before returning
+    fs = lint("""
+        import jax.numpy as jnp
+
+        def causal_conv(x, w, state=None):
+            width = w.shape[0]
+            if state is None:
+                xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+            else:
+                xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+            out = xp * w
+            new_state = xp[:, -(width - 1):]
+            if state is not None:
+                new_state = new_state.astype(state.dtype)
+            return out, new_state
+    """)
+    assert active(fs, "DLK010") == []
+
+
+def test_dtype_drift_literal_cast_and_no_carry_clean():
+    # an explicit concrete dtype is a deliberate pin, not a drift
+    fs = lint("""
+        import jax.numpy as jnp
+
+        def scan_step(carry, x):
+            new = carry * 0.5 + x
+            return new.astype(jnp.float32), x
+    """)
+    assert active(fs, "DLK010") == []
+    # no carry-shaped params -> the lattice never runs
+    fs = lint("""
+        def project(x, w):
+            return (x @ w).astype(x.dtype)
+    """)
+    assert active(fs, "DLK010") == []
+
+
+def test_dtype_drift_suppressed():
+    src = _PRE_PR9_CONV.replace(
+        "return out, new_state",
+        "return out, new_state  # dalek: allow[dtype-drift] fixture")
+    fs = lint(src)
+    assert active(fs, "DLK010") == []
+    assert any(f.code == "DLK010" and f.suppressed for f in fs)
+
+
+def test_checked_in_baseline_has_no_dtype_drift():
+    # DLK010 mirrors DLK001 policy: fixed, never grandfathered
+    keys = baseline_mod.load()
+    assert not any(code == "DLK010" for code, _, _ in keys)
+
+
+# -- DLK011 ownership-handoff --------------------------------------------------
+
+
+def test_ownership_handoff_flagged():
+    fs = lint("""
+        def peek(blk):
+            print(blk.idx)
+
+        def run(pool):
+            blk = pool.alloc()
+            peek(blk)
+    """)
+    act = active(fs, "DLK011")
+    assert len(act) == 1
+    assert "peek" in act[0].message and "block" in act[0].message
+
+
+def test_ownership_handoff_cross_module(tmp_path):
+    (tmp_path / "inspect_util.py").write_text(textwrap.dedent("""
+        def peek(blk):
+            print(blk.idx)
+    """))
+    (tmp_path / "runner.py").write_text(textwrap.dedent("""
+        from inspect_util import peek
+
+        def run(pool):
+            blk = pool.alloc()
+            peek(blk)
+    """))
+    fs = analyze_project([str(tmp_path)])
+    act = active(fs, "DLK011")
+    assert len(act) == 1 and act[0].path.endswith("runner.py")
+
+
+def test_ownership_handoff_clean_when_callee_consumes():
+    # freeing, storing, returning, or entering in the callee settles it
+    for body in ("blk.free()", "self.blocks[0] = blk", "return blk"):
+        fs = lint(f"""
+            class Holder:
+                def sink(self, blk):
+                    {body}
+
+                def run(self, pool):
+                    blk = pool.alloc()
+                    self.sink(blk)
+        """)
+        assert active(fs, "DLK011") == [], body
+    # a local consuming use (pool.free is unresolvable -> transfer) wins
+    fs = lint("""
+        def peek(blk):
+            print(blk.idx)
+
+        def run(pool):
+            blk = pool.alloc()
+            peek(blk)
+            pool.free(blk)
+    """)
+    assert active(fs, "DLK011") == []
+
+
+def test_ownership_handoff_span_and_suppression():
+    fs = lint("""
+        def annotate(sp):
+            sp.args["x"] = 1
+
+        def run(tracer):
+            sp = tracer.begin("step")
+            annotate(sp)
+    """)
+    assert len(active(fs, "DLK011")) == 1
+    fs = lint("""
+        def peek(blk):
+            print(blk.idx)
+
+        def run(pool):
+            blk = pool.alloc()
+            peek(blk)  # dalek: allow[ownership-handoff] fixture
+    """)
+    assert active(fs, "DLK011") == []
+    assert any(f.code == "DLK011" and f.suppressed for f in fs)
+
+
+# -- DLK012 unguarded-shared-state ---------------------------------------------
+
+
+def test_unguarded_shared_state_flagged():
+    fs = lint("""
+        import threading
+
+        class Stats:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0
+
+            def inc(self):
+                with self._lock:
+                    self._n += 1
+
+            def read(self):
+                return self._n
+    """)
+    act = active(fs, "DLK012")
+    assert len(act) == 1
+    assert "_n" in act[0].message and "read" in act[0].message
+
+
+def test_unguarded_shared_state_container_mutation_flagged():
+    # writes through the container (append / item-store) count as writes
+    fs = lint("""
+        import threading
+
+        class Ring:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._events = []
+
+            def push(self, e):
+                with self._lock:
+                    self._events.append(e)
+
+            def drain(self):
+                return list(self._events)
+    """)
+    assert len(active(fs, "DLK012")) == 1
+
+
+def test_unguarded_shared_state_base_class_lock():
+    # the lock is created in a base class: usage-based detection
+    # (`with self._lock`) still marks the subclass as lock-guarded
+    fs = lint("""
+        class Counter(Metric):
+            def inc(self):
+                with self._lock:
+                    self._values["x"] = 1
+
+            def value(self):
+                return self._values.get("x")
+    """)
+    assert len(active(fs, "DLK012")) == 1
+
+
+def test_unguarded_shared_state_clean_cases():
+    # everything guarded -> clean; init-only writes -> clean
+    fs = lint("""
+        import threading
+
+        class Stats:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0
+                self.edges = [1, 2, 3]
+
+            def inc(self):
+                with self._lock:
+                    self._n += 1
+
+            def read(self):
+                with self._lock:
+                    return self._n
+
+            def bucket(self, v):
+                return self.edges.index(v)
+    """)
+    assert active(fs, "DLK012") == []
+    # a class without a lock is out of scope
+    fs = lint("""
+        class Plain:
+            def __init__(self):
+                self._n = 0
+
+            def inc(self):
+                self._n += 1
+    """)
+    assert active(fs, "DLK012") == []
+
+
+def test_unguarded_shared_state_guarded_method_fixpoint():
+    # `_locked`-suffix methods, and methods whose every call site holds the
+    # lock, are guaranteed-guarded (the TagBus._alloc pattern)
+    fs = lint("""
+        import threading
+
+        class Bus:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0
+                self._slots = {}
+
+            def _compile_locked(self):
+                self._slots["a"] = 1
+
+            def _bump(self):
+                self._n += 1
+
+            def inc(self):
+                with self._lock:
+                    self._bump()
+                    self._compile_locked()
+    """)
+    assert active(fs, "DLK012") == []
+
+
+def test_unguarded_shared_state_suppressed():
+    fs = lint("""
+        import threading
+
+        class Stats:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0
+
+            def inc(self):
+                with self._lock:
+                    self._n += 1
+
+            def read(self):
+                return self._n  # dalek: allow[unguarded-shared-state] demo
+    """)
+    assert active(fs, "DLK012") == []
+    assert any(f.code == "DLK012" and f.suppressed for f in fs)
+
+
+# -- multi-line pragma spans ---------------------------------------------------
+
+
+def test_pragma_on_any_line_of_wrapped_statement():
+    # regression: the pragma used to match only the node's FIRST line, so a
+    # finding on a wrapped call could not be suppressed at its closing paren
+    fs = lint("""
+        import jax
+        f = jax.jit(
+            lambda x: x)  # dalek: allow[bare-jit] wrapped fixture
+    """)
+    assert active(fs) == [] and any(f.suppressed for f in fs)
+
+
+def test_pragma_inside_statement_body_does_not_blanket_suppress():
+    # a finding on an `if` (traced-branch) spans only the HEADER lines —
+    # an allow[] buried in the body must not suppress it
+    fs = lint("""
+        import jax
+
+        @jax.jit  # dalek: allow[bare-jit] fixture
+        def f(x):
+            y = x.sum()
+            if y > 0:
+                z = 1  # dalek: allow[traced-branch] must not reach the if
+            return y
+    """)
+    assert len(active(fs, "DLK003")) == 1
+    # on the header line itself, it does suppress
+    fs = lint("""
+        import jax
+
+        @jax.jit  # dalek: allow[bare-jit] fixture
+        def f(x):
+            y = x.sum()
+            if y > 0:  # dalek: allow[traced-branch] fixture
+                z = 1
+            return y
+    """)
+    assert active(fs, "DLK003") == []
+
+
+# -- ProjectIndex --------------------------------------------------------------
+
+
+def test_project_index_resolves_imports_and_methods(tmp_path):
+    (tmp_path / "util.py").write_text(textwrap.dedent("""
+        import numpy as np
+
+        def pull(v):
+            return np.asarray(v)
+
+        class Sink:
+            def drain(self, v):
+                return v.item()
+    """))
+    (tmp_path / "main.py").write_text(textwrap.dedent("""
+        from util import pull, Sink
+        import util
+
+        def a(v):
+            return pull(v)
+
+        def b(v):
+            return util.pull(v)
+    """))
+    index, errors = ProjectIndex.from_paths([str(tmp_path)])
+    assert errors == []
+    # summaries: pull() syncs its param; a/b inherit transitively
+    by_suffix = {fq.rsplit(".", 1)[-1]: s for fq, s in index.summaries.items()}
+    assert 0 in by_suffix["pull"].syncs_params
+    assert 0 in by_suffix["a"].syncs_params
+    assert 0 in by_suffix["b"].syncs_params
+    # the method is addressable too (self param offset applies at call sites)
+    assert 1 in by_suffix["drain"].syncs_params
+
+
+def test_project_index_order_independent(tmp_path):
+    files = []
+    for name in ("aa", "bb", "cc"):
+        p = tmp_path / f"{name}.py"
+        p.write_text(textwrap.dedent(f"""
+            import numpy as np
+
+            def sync_{name}(v):
+                return np.asarray(v)
+        """))
+        files.append(str(p))
+    fwd, _ = ProjectIndex.from_paths(files)
+    rev, _ = ProjectIndex.from_paths(list(reversed(files)))
+    assert [c.path for c in fwd.contexts] == [c.path for c in rev.contexts]
+    assert {fq: s.facts() for fq, s in fwd.summaries.items()} \
+        == {fq: s.facts() for fq, s in rev.summaries.items()}
+
+
+def test_project_output_deterministic_under_shuffle(tmp_path, capsys):
+    # shuffled discovery order -> byte-identical --json and --gate-json
+    (tmp_path / "one.py").write_text(
+        "import jax\nf = jax.jit(lambda x: x)\n")
+    (tmp_path / "two.py").write_text(
+        "import numpy as np\n\ndef fetch(v):\n    return np.asarray(v)\n")
+    (tmp_path / "three.py").write_text("x = 1\n")
+    names = ["one.py", "two.py", "three.py"]
+    outs, gates = [], []
+    for order in (names, list(reversed(names)), names[1:] + names[:1]):
+        gate = tmp_path / "gate.json"
+        argv = ["--project"] + [str(tmp_path / n) for n in order] \
+            + ["--json", "--gate-json", str(gate)]
+        cli_main(argv)
+        outs.append(capsys.readouterr().out.encode())
+        gates.append(gate.read_bytes())
+    assert outs[0] == outs[1] == outs[2]
+    assert gates[0] == gates[1] == gates[2]
+
+
 # -- suppression / baseline / CLI ---------------------------------------------
 
 
@@ -547,8 +1084,19 @@ def test_gate_rows_shape():
 
 
 def test_repo_is_lint_clean_modulo_baseline():
-    paths = [str(REPO / "src"), str(REPO / "benchmarks"), str(REPO / "tests")]
+    paths = [str(REPO / p) for p in
+             ("src", "benchmarks", "examples", "tests")]
     findings = analyze_paths(paths)
+    baseline_mod.apply(findings, baseline_mod.load())
+    assert [f.render() for f in findings if f.active] == []
+
+
+def test_repo_is_project_clean_modulo_baseline():
+    # the CI invocation: whole-program mode over every tree, so the
+    # interprocedural rules (DLK009-DLK012) see cross-module call edges
+    paths = [str(REPO / p) for p in
+             ("src", "benchmarks", "examples", "tests")]
+    findings = analyze_project(paths)
     baseline_mod.apply(findings, baseline_mod.load())
     assert [f.render() for f in findings if f.active] == []
 

@@ -1,0 +1,61 @@
+"""Pin the regression_gate new-row convention: a row that appears for the
+first time (e.g. analysis/DLK009..012 landing with a new rule) is printed
+but NOT gated; once present in both snapshots, any findings increase fails.
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "regression_gate", REPO / "benchmarks" / "regression_gate.py")
+regression_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(regression_gate)
+
+
+def _write(path, rows):
+    path.write_text(json.dumps(rows))
+    return str(path)
+
+
+def test_new_analysis_rows_are_ungated(tmp_path, capsys):
+    # previous snapshot predates the interprocedural rules; their first
+    # appearance — even with nonzero findings — must not fail the gate
+    prev = _write(tmp_path / "prev.json", {
+        "analysis/DLK001": {"findings": 0},
+    })
+    cur = _write(tmp_path / "cur.json", {
+        "analysis/DLK001": {"findings": 0},
+        "analysis/DLK009": {"findings": 3},
+        "analysis/DLK010": {"findings": 1},
+        "analysis/DLK011": {"findings": 2},
+        "analysis/DLK012": {"findings": 5},
+    })
+    assert regression_gate.main([prev, cur]) == 0
+    out = capsys.readouterr().out
+    assert "not gated" in out and "DLK009" in out
+
+
+def test_findings_increase_on_pinned_row_fails(tmp_path):
+    # once a rule's row exists in the previous snapshot it is pinned:
+    # any increase in findings fails the gate
+    prev = _write(tmp_path / "prev.json", {
+        "analysis/DLK009": {"findings": 0},
+    })
+    cur = _write(tmp_path / "cur.json", {
+        "analysis/DLK009": {"findings": 2},
+    })
+    assert regression_gate.main([prev, cur]) == 1
+
+
+def test_findings_decrease_or_equal_passes(tmp_path):
+    prev = _write(tmp_path / "prev.json", {
+        "analysis/DLK009": {"findings": 2},
+        "analysis/DLK012": {"findings": 4},
+    })
+    cur = _write(tmp_path / "cur.json", {
+        "analysis/DLK009": {"findings": 0},
+        "analysis/DLK012": {"findings": 4},
+    })
+    assert regression_gate.main([prev, cur]) == 0
